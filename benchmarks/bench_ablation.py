@@ -1,0 +1,26 @@
+"""Paper Figures 9/10: ablations on straggler probability and slow-down."""
+from benchmarks.common import csv_row, make_classification_trainer
+
+
+def run(paper_scale: bool = False):
+    n = 128 if paper_scale else 16
+    budget = 50.0
+    rows = []
+    algs = ("dsgd_aau", "ad_psgd", "prague") if not paper_scale else \
+        ("dsgd_aau", "dsgd_sync", "ad_psgd", "prague", "agp")
+    for prob in (0.05, 0.1, 0.2, 0.4):
+        for alg in algs:
+            res = make_classification_trainer(
+                alg, n, straggler_prob=prob).run(max_time=budget,
+                                                 eval_every=10**6)
+            rows.append(csv_row(
+                f"ablation/prob{int(prob*100)}/{alg}", 0.0,
+                f"acc={res.final_metric:.4f};loss={res.final_loss:.4f}"))
+    for slow in (5.0, 10.0, 20.0, 40.0):
+        for alg in algs:
+            res = make_classification_trainer(
+                alg, n, slowdown=slow).run(max_time=budget, eval_every=10**6)
+            rows.append(csv_row(
+                f"ablation/slow{int(slow)}x/{alg}", 0.0,
+                f"acc={res.final_metric:.4f};loss={res.final_loss:.4f}"))
+    return rows

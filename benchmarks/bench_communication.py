@@ -1,0 +1,21 @@
+"""Paper Figure 5b: network transmission for training, per algorithm.
+
+Counts parameter-vector copies moved over the network until a fixed virtual
+time; DSGD-AAU must achieve its speedup at no extra communication.
+"""
+from benchmarks.common import ALGS, csv_row, make_classification_trainer
+
+
+def run(paper_scale: bool = False):
+    n = 128 if paper_scale else 16
+    budget = 50.0
+    rows = []
+    for alg in ALGS:
+        res = make_classification_trainer(alg, n).run(max_time=budget,
+                                                      eval_every=10**6)
+        gb = res.comm_bytes() / 2**30
+        rows.append(csv_row(
+            f"communication/{alg}", 0.0,
+            f"param_copies={res.total_comm_copies};GiB={gb:.3f};"
+            f"acc={res.final_metric:.4f}"))
+    return rows

@@ -1,0 +1,22 @@
+"""Paper Table 1 / Figure 3: loss & accuracy per iteration budget, 4+ algorithms."""
+from benchmarks.common import ALGS, csv_row, make_classification_trainer, \
+    make_charlm_trainer, timed_run
+
+
+def run(paper_scale: bool = False):
+    n = 128 if paper_scale else 16
+    events = 600 if paper_scale else 120
+    rows = []
+    for alg in ALGS:
+        res, wall = timed_run(make_classification_trainer(alg, n),
+                              max_events=events, eval_every=events)
+        rows.append(csv_row(
+            f"convergence/2nn/{alg}", 1e6 * wall / max(res.total_events, 1),
+            f"loss={res.final_loss:.4f};acc={res.final_metric:.4f};iters={res.total_events}"))
+    for alg in ALGS:
+        res, wall = timed_run(make_charlm_trainer(alg, max(8, n // 2)),
+                              max_events=events // 2, eval_every=events // 2)
+        rows.append(csv_row(
+            f"convergence/charlm/{alg}", 1e6 * wall / max(res.total_events, 1),
+            f"loss={res.final_loss:.4f};iters={res.total_events}"))
+    return rows

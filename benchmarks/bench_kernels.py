@@ -1,0 +1,76 @@
+"""Kernel micro-benchmarks (TPU-adaptation layer).
+
+On this CPU container Pallas kernels run in interpret mode (a Python-level
+executor), so wall-clock numbers are reported for the pure-jnp oracles — the
+quantity that is meaningful on this host — while each kernel's output is
+verified against its oracle in the same sweep.  ``derived`` records the
+max-abs error.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.core.consensus import metropolis_matrix
+from repro.kernels.gossip_mix import gossip_mix, gossip_mix_ref
+from repro.kernels.linear_scan import linear_scan, linear_scan_ref
+from repro.kernels.swa_attention import swa_attention, swa_attention_ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return 1e6 * (time.time() - t0) / reps
+
+
+def run(paper_scale: bool = False):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # gossip_mix: N workers × D params
+    for n, d in ((16, 1 << 16), (32, 1 << 18)):
+        W = jax.random.normal(key, (n, d))
+        P = jnp.asarray(metropolis_matrix(
+            n, [(i, (i + 1) % n) for i in range(n)]), jnp.float32)
+        ref = jax.jit(gossip_mix_ref)
+        us = _time(ref, W, P)
+        err = float(jnp.max(jnp.abs(gossip_mix(W, P) - ref(W, P))))
+        rows.append(csv_row(f"kernel/gossip_mix/N{n}_D{d}", us,
+                            f"maxerr_vs_ref={err:.2e}"))
+
+    # linear_scan
+    B, T, D = 2, 512, 256
+    a = jax.nn.sigmoid(jax.random.normal(key, (B, T, D)))
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, D))
+    ref = jax.jit(linear_scan_ref)
+    us = _time(ref, a, x)
+    err = float(jnp.max(jnp.abs(linear_scan(a, x) - ref(a, x))))
+    rows.append(csv_row(f"kernel/linear_scan/B{B}_T{T}_D{D}", us,
+                        f"maxerr_vs_ref={err:.2e}"))
+
+    # swa_attention
+    B, T, H, KV, dh, w = 1, 512, 4, 2, 64, 128
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, T, H, dh))
+    k = jax.random.normal(ks[1], (B, T, KV, dh))
+    v = jax.random.normal(ks[2], (B, T, KV, dh))
+
+    def ref_fn(q, k, v):
+        qf = q.transpose(0, 2, 1, 3).reshape(B * H, T, dh)
+        kf = k.transpose(0, 2, 1, 3).reshape(B * KV, T, dh)
+        vf = v.transpose(0, 2, 1, 3).reshape(B * KV, T, dh)
+        o = swa_attention_ref(qf, kf, vf, window=w, n_groups=H // KV)
+        return o.reshape(B, H, T, dh).transpose(0, 2, 1, 3)
+
+    refj = jax.jit(ref_fn)
+    us = _time(refj, q, k, v)
+    out = swa_attention(q, k, v, window=w, block_q=128, block_k=128)
+    err = float(jnp.max(jnp.abs(out - refj(q, k, v))))
+    rows.append(csv_row(f"kernel/swa_attention/T{T}_w{w}", us,
+                        f"maxerr_vs_ref={err:.2e}"))
+    return rows

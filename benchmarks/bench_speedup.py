@@ -1,0 +1,28 @@
+"""Paper Figure 5a: speedup vs #workers.
+
+Speedup of each algorithm = (virtual time for synchronous DSGD with full
+worker updates to reach the target loss) / (virtual time for the algorithm),
+per worker count — the paper's definition with DSGD as the reference.
+"""
+from benchmarks.common import csv_row, make_classification_trainer
+
+TARGET = 0.9  # training-loss target (2-NN synthetic reaches ~0.4 at plateau)
+
+
+def run(paper_scale: bool = False):
+    ns = (32, 64, 128, 256) if paper_scale else (8, 16, 32)
+    rows = []
+    for n in ns:
+        ref = make_classification_trainer("dsgd_sync", n).run(
+            max_time=400.0, eval_every=5)
+        t_ref = ref.time_to_loss(TARGET) or float("inf")
+        for alg in ("dsgd_aau", "ad_psgd", "prague", "agp"):
+            res = make_classification_trainer(alg, n).run(
+                max_time=400.0, eval_every=20)
+            t = res.time_to_loss(TARGET)
+            speedup = (t_ref / t) if t else 0.0
+            rows.append(csv_row(
+                f"speedup/N{n}/{alg}", 0.0,
+                f"speedup_vs_sync={speedup:.2f};t_target={t if t else -1:.1f};"
+                f"t_sync={t_ref:.1f}"))
+    return rows

@@ -1,0 +1,16 @@
+"""Paper Figure 4 / Table 2: accuracy for a fixed (virtual) wall-clock budget."""
+from benchmarks.common import ALGS, csv_row, make_classification_trainer, timed_run
+
+
+def run(paper_scale: bool = False):
+    n = 128 if paper_scale else 16
+    budget = 50.0  # the paper trains ResNet-18 for 50 (real) seconds
+    rows = []
+    for alg in ALGS:
+        res, wall = timed_run(make_classification_trainer(alg, n),
+                              max_time=budget, eval_every=200)
+        rows.append(csv_row(
+            f"walltime/2nn/{alg}", 1e6 * wall / max(res.total_events, 1),
+            f"acc@t{budget:.0f}={res.final_metric:.4f};loss={res.final_loss:.4f};"
+            f"iters={res.total_events}"))
+    return rows

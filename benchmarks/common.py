@@ -1,0 +1,94 @@
+"""Shared experiment harness for the paper-table benchmarks.
+
+Builds (algorithm × model × data × straggler) trainers at a configurable
+scale.  The paper runs N ∈ {32, 64, 128, 256} workers on GPUs; the default
+benchmark scale is N=16/32 so the whole suite runs on CPU in minutes — pass
+``--paper-scale`` to ``benchmarks.run`` for N=128 (slow).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import topology
+from repro.core.baselines import make_scheduler
+from repro.core.runner import DecentralizedTrainer, RunResult
+from repro.core.straggler import StragglerModel
+from repro.data import CharLMData, ClassificationData
+from repro.models import init_model, lm_loss
+
+ALGS = ("dsgd_aau", "dsgd_sync", "ad_psgd", "prague", "agp")
+
+
+def mlp2nn_loss(params, batch):
+    """The paper's 2-NN (Table 3 shape, reduced input dim for synthetic data)."""
+    h = jax.nn.relu(batch["x"] @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    logits = h @ params["w3"] + params["b3"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], axis=1))
+
+
+def mlp2nn_eval(params, batch):
+    h = jax.nn.relu(batch["x"] @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    logits = h @ params["w3"] + params["b3"]
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+    return mlp2nn_loss(params, batch), acc
+
+
+def mlp2nn_init(d_in=64, d_h=256, n_cls=10):
+    def init(key):
+        ks = jax.random.split(key, 3)
+        s = lambda k, a, b: jax.random.normal(k, (a, b)) / np.sqrt(a)
+        return {"w1": s(ks[0], d_in, d_h), "b1": jnp.zeros(d_h),
+                "w2": s(ks[1], d_h, d_h), "b2": jnp.zeros(d_h),
+                "w3": s(ks[2], d_h, n_cls), "b3": jnp.zeros(n_cls)}
+    return init
+
+
+def make_classification_trainer(alg: str, n: int, *, straggler_prob=0.1,
+                                slowdown=10.0, seed=0, partition="label_shard",
+                                eta0=0.2) -> DecentralizedTrainer:
+    data = ClassificationData(n_workers=n, d=64, partition=partition,
+                              samples_per_worker=256, seed=0)
+    g = topology.erdos_renyi(n, max(0.15, 4.0 / n), seed=1)
+    sm = StragglerModel(n=n, straggler_prob=straggler_prob,
+                        slowdown=slowdown, seed=seed)
+    sched = make_scheduler(alg, g, sm)
+    return DecentralizedTrainer(
+        sched, mlp2nn_loss, mlp2nn_init(),
+        lambda w, s: data.batch(w, s, batch_size=32),
+        data.eval_batch(1024), eval_fn=mlp2nn_eval,
+        eta0=eta0, eta_decay=0.999, seed=seed)
+
+
+def make_charlm_trainer(alg: str, n: int, *, straggler_prob=0.1,
+                        slowdown=10.0, seed=0) -> DecentralizedTrainer:
+    cfg = get_config("paper-char-lm").reduced()
+    data = CharLMData(n_workers=n, vocab=cfg.vocab_size, seq_len=32, seed=0)
+    g = topology.erdos_renyi(n, max(0.15, 4.0 / n), seed=1)
+    sm = StragglerModel(n=n, straggler_prob=straggler_prob,
+                        slowdown=slowdown, seed=seed)
+    sched = make_scheduler(alg, g, sm)
+    return DecentralizedTrainer(
+        sched, lambda p, b: lm_loss(p, cfg, b),
+        lambda k: init_model(k, cfg),
+        lambda w, s: data.batch(w, s, batch_size=8),
+        data.eval_batch(16), eta0=0.5, eta_decay=0.999, seed=seed)
+
+
+def timed_run(trainer: DecentralizedTrainer, **run_kw):
+    t0 = time.time()
+    res = trainer.run(**run_kw)
+    wall = time.time() - t0
+    return res, wall
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

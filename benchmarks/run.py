@@ -1,0 +1,41 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  python -m benchmarks.run [--paper-scale] [--only convergence,roofline]
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
+Default scale finishes on CPU in minutes; --paper-scale reproduces the
+paper's N=128 settings (slow).
+"""
+import argparse
+import sys
+import time
+
+MODULES = ("convergence", "walltime", "speedup", "communication",
+           "ablation", "kernels", "roofline")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(MODULES))
+    args = ap.parse_args()
+    chosen = args.only.split(",") if args.only else list(MODULES)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in chosen:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            for row in mod.run(paper_scale=args.paper_scale):
+                print(row)
+        except Exception as e:  # a failing table is a bug, not a skip
+            failures += 1
+            print(f"{name},0.0,ERROR={e!r}")
+        print(f"# bench_{name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

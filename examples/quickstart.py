@@ -1,0 +1,53 @@
+"""Quickstart: straggler-resilient decentralized training in ~30 lines.
+
+Trains the paper's 2-NN on synthetic non-iid data with all five algorithms
+under a 10×-slowdown straggler model and prints the Table-2-style comparison.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology
+from repro.core.baselines import make_scheduler
+from repro.core.runner import DecentralizedTrainer
+from repro.core.straggler import StragglerModel
+from repro.data import ClassificationData
+
+N_WORKERS = 16
+data = ClassificationData(n_workers=N_WORKERS, d=64, partition="label_shard",
+                          classes_per_worker=5, samples_per_worker=256)
+graph = topology.erdos_renyi(N_WORKERS, 0.3, seed=1)         # the paper's
+stragglers = StragglerModel(n=N_WORKERS, straggler_prob=0.1,  # experimental
+                            slowdown=10.0)                    # protocol
+
+
+def loss_fn(params, batch):
+    h = jax.nn.relu(batch["x"] @ params["w1"])
+    logits = h @ params["w2"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], axis=1))
+
+
+def eval_fn(params, batch):
+    h = jax.nn.relu(batch["x"] @ params["w1"])
+    acc = jnp.mean((jnp.argmax(h @ params["w2"], -1) == batch["y"]).astype(jnp.float32))
+    return loss_fn(params, batch), acc
+
+
+def init_fn(key):
+    k1, k2 = jax.random.split(key)
+    return {"w1": jax.random.normal(k1, (64, 256)) * 0.1,
+            "w2": jax.random.normal(k2, (256, 10)) * 0.1}
+
+
+print(f"{'algorithm':12s} {'acc@t=50':>9s} {'loss':>8s} {'iters':>6s} {'comm-GiB':>9s}")
+for alg in ("dsgd_aau", "dsgd_sync", "ad_psgd", "prague", "agp"):
+    trainer = DecentralizedTrainer(
+        make_scheduler(alg, graph, stragglers), loss_fn, init_fn,
+        lambda w, s: data.batch(w, s, 32), data.eval_batch(1024),
+        eval_fn=eval_fn, eta0=0.2)
+    res = trainer.run(max_time=50.0, eval_every=10**6)
+    print(f"{alg:12s} {res.final_metric:9.4f} {res.final_loss:8.4f} "
+          f"{res.total_events:6d} {res.comm_bytes()/2**30:9.3f}")

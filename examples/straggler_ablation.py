@@ -1,0 +1,31 @@
+"""Figure 9/10 ablation: how straggler probability & slow-down affect each
+algorithm's accuracy at a fixed virtual-time budget.
+
+  PYTHONPATH=src python examples/straggler_ablation.py
+"""
+import sys
+
+sys.path.insert(0, "benchmarks") if "benchmarks" not in sys.path else None
+
+from benchmarks.common import make_classification_trainer
+
+BUDGET = 50.0
+
+print("== straggler probability sweep (slowdown 10x) ==")
+print(f"{'prob':>6s}  " + "  ".join(f"{a:>10s}" for a in ("dsgd_aau", "ad_psgd", "prague")))
+for prob in (0.05, 0.1, 0.2, 0.4):
+    accs = []
+    for alg in ("dsgd_aau", "ad_psgd", "prague"):
+        res = make_classification_trainer(alg, 16, straggler_prob=prob).run(
+            max_time=BUDGET, eval_every=10**6)
+        accs.append(res.final_metric)
+    print(f"{prob:6.2f}  " + "  ".join(f"{a:10.4f}" for a in accs))
+
+print("== slow-down sweep (prob 10%) ==")
+for slow in (5.0, 10.0, 20.0, 40.0):
+    accs = []
+    for alg in ("dsgd_aau", "ad_psgd", "prague"):
+        res = make_classification_trainer(alg, 16, slowdown=slow).run(
+            max_time=BUDGET, eval_every=10**6)
+        accs.append(res.final_metric)
+    print(f"{slow:5.0f}x  " + "  ".join(f"{a:10.4f}" for a in accs))

@@ -1,0 +1,83 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs."""
+import json
+import sys
+
+
+def load(path):
+    return {(r["arch"], r["shape"]): r for r in json.load(open(path))
+            if "error" not in r}
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def roofline_table(single, baseline=None):
+    hdr = ("| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+           "dominant | useful | peak GiB/dev |")
+    sep = "|---|---|---:|---:|---:|---|---:|---:|"
+    out = [hdr, sep]
+    for (a, s), r in sorted(single.items()):
+        out.append(
+            f"| {a} | {s} | {r['compute_s']*1e3:,.1f} | {r['memory_s']*1e3:,.1f} "
+            f"| {r['collective_s']*1e3:,.1f} | {r['dominant']} "
+            f"| {r['useful_flops_ratio']:.2f} | {fmt_bytes(r['peak_bytes_per_device'])} |")
+    return "\n".join(out)
+
+
+def dryrun_table(single, multi):
+    hdr = ("| arch | shape | mesh 16×16 peak GiB | coll GiB/dev | "
+           "mesh 2×16×16 peak GiB | coll GiB/dev |")
+    sep = "|---|---|---:|---:|---:|---:|"
+    out = [hdr, sep]
+    for (a, s) in sorted(single):
+        r1, r2 = single[(a, s)], multi.get((a, s))
+        c1 = r1["coll_bytes"] / 2**30
+        c2 = r2["coll_bytes"] / 2**30 if r2 else float("nan")
+        out.append(
+            f"| {a} | {s} | {fmt_bytes(r1['peak_bytes_per_device'])} | {c1:.2f} "
+            f"| {fmt_bytes(r2['peak_bytes_per_device']) if r2 else '—'} | {c2:.2f} |")
+    return "\n".join(out)
+
+
+def before_after(baseline, opt, pairs):
+    hdr = ("| pair | term | baseline (ms) | optimized (ms) | Δ |")
+    sep = "|---|---|---:|---:|---:|"
+    out = [hdr, sep]
+    for a, s in pairs:
+        b, o = baseline.get((a, s)), opt.get((a, s))
+        if not (b and o):
+            continue
+        for term in ("compute_s", "memory_s", "collective_s"):
+            bv, ov = b[term] * 1e3, o[term] * 1e3
+            d = (1 - ov / bv) * 100 if bv else 0
+            out.append(f"| {a}×{s} | {term[:-2]} | {bv:,.1f} | {ov:,.1f} "
+                       f"| {d:+.0f}% |")
+        out.append(f"| {a}×{s} | peak GiB | "
+                   f"{b['peak_bytes_per_device']/2**30:.1f} | "
+                   f"{o['peak_bytes_per_device']/2**30:.1f} | "
+                   f"{(1-o['peak_bytes_per_device']/b['peak_bytes_per_device'])*100:+.0f}% |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    single = load("experiments/dryrun_single.json")
+    multi = load("experiments/dryrun_multi.json")
+    base = load("experiments/baseline_single.json")
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("roofline", "all"):
+        print("### Roofline (single-pod 16×16)\n")
+        print(roofline_table(single))
+    if which in ("dryrun", "all"):
+        print("\n### Dry-run (both meshes)\n")
+        print(dryrun_table(single, multi))
+    if which in ("perf", "all"):
+        print("\n### Before/after (hillclimbed pairs + spillover)\n")
+        print(before_after(base, single, [
+            ("deepseek-67b", "prefill_32k"),
+            ("minicpm-2b", "train_4k"),
+            ("arctic-480b", "prefill_32k"),
+            ("deepseek-67b", "train_4k"),
+            ("arctic-480b", "train_4k"),
+            ("qwen3-8b", "train_4k"),
+        ]))

@@ -1,0 +1,141 @@
+"""Pytree checkpointing (npz-based, dependency-free).
+
+Supports the decentralized trainer's stacked worker state (save/restore the
+full (N, …) stack or a single worker's slice — what a real deployment would
+write per-host), plus data-pipeline cursors and step metadata.  Writes are
+atomic (tmp + rename) and keep a bounded history.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"ckpt_{step:08d}.npz")
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> str:
+        flat = _flatten_with_paths(tree)
+        # numpy's npz cannot store ml_dtypes (bfloat16 etc.): store the raw
+        # bits and record the original dtype for restore.
+        dtypes = {}
+        for k, v in list(flat.items()):
+            if v.dtype.name not in _NATIVE_DTYPES:
+                dtypes[k] = v.dtype.name
+                flat[k] = v.view(np.uint8).reshape(v.shape + (v.dtype.itemsize,))
+        meta = {
+            "step": step,
+            "dtypes": dtypes,
+            "extra": extra or {},
+        }
+        path = self._path(step)
+        fd, tmp = tempfile.mkstemp(dir=self.directory, suffix=".npz")
+        os.close(fd)
+        np.savez(tmp, __meta__=json.dumps(meta, default=_json_default), **flat)
+        os.replace(tmp, path)  # atomic publish
+        self._gc()
+        return path
+
+    def restore(self, like: Any, step: Optional[int] = None) -> Tuple[Any, Dict]:
+        """Restore into the structure of ``like`` (shapes must match)."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        data = np.load(self._path(step), allow_pickle=False)
+        meta = json.loads(str(data["__meta__"]))
+        dtypes = meta.get("dtypes", {})
+        leaves = []
+        for path, leaf in jax.tree_util.tree_flatten_with_path(like)[0]:
+            key = "/".join(_path_str(p) for p in path)
+            if key not in data:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = _undo_bits(data[key], dtypes.get(key))
+            if arr.shape != np.asarray(leaf).shape:
+                raise ValueError(f"{key}: shape {arr.shape} != {np.shape(leaf)}")
+            leaves.append(jnp.asarray(arr, dtype=leaf.dtype if hasattr(leaf, 'dtype') else None))
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(like), leaves)
+        return tree, meta.get("extra", {})
+
+    def restore_worker_slice(self, like_single: Any, worker: int,
+                             step: Optional[int] = None) -> Any:
+        """Restore one worker's parameters from a stacked (N, …) checkpoint."""
+        step = self.latest_step() if step is None else step
+        data = np.load(self._path(step), allow_pickle=False)
+        meta = json.loads(str(data["__meta__"]))
+        dtypes = meta.get("dtypes", {})
+        leaves = []
+        for path, leaf in jax.tree_util.tree_flatten_with_path(like_single)[0]:
+            key = "/".join(_path_str(p) for p in path)
+            leaves.append(jnp.asarray(_undo_bits(data[key], dtypes.get(key))[worker]))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(like_single), leaves)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def all_steps(self):
+        out = []
+        for f in os.listdir(self.directory):
+            if f.startswith("ckpt_") and f.endswith(".npz"):
+                out.append(int(f[5:-4]))
+        return sorted(out)
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            os.remove(self._path(s))
+
+
+_NATIVE_DTYPES = {"bool", "int8", "uint8", "int16", "uint16", "int32",
+                  "uint32", "int64", "uint64", "float16", "float32",
+                  "float64", "complex64", "complex128"}
+
+
+def _undo_bits(arr: np.ndarray, dtype_name: Optional[str]) -> np.ndarray:
+    if dtype_name is None:
+        return arr
+    import ml_dtypes
+    dt = np.dtype(getattr(ml_dtypes, dtype_name))
+    return arr.reshape(arr.shape[:-1] + (-1,)).view(dt).reshape(arr.shape[:-1])
+
+
+def _json_default(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(type(o))

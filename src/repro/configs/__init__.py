@@ -1,0 +1,30 @@
+"""Assigned-architecture registry.  Importing this package registers all archs."""
+from repro.configs.base import ModelConfig, get_config, list_configs, register
+
+# assigned pool (10 archs, 6 families)
+from repro.configs import (  # noqa: F401
+    deepseek_67b,
+    rwkv6_1_6b,
+    minicpm_2b,
+    musicgen_large,
+    grok_1_314b,
+    mistral_nemo_12b,
+    arctic_480b,
+    llava_next_mistral_7b,
+    recurrentgemma_2b,
+    qwen3_8b,
+    paper_models,
+)
+
+ASSIGNED = (
+    "deepseek-67b",
+    "rwkv6-1.6b",
+    "minicpm-2b",
+    "musicgen-large",
+    "grok-1-314b",
+    "mistral-nemo-12b",
+    "arctic-480b",
+    "llava-next-mistral-7b",
+    "recurrentgemma-2b",
+    "qwen3-8b",
+)

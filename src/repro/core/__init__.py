@@ -1,0 +1,21 @@
+"""Core library: the paper's contribution (DSGD-AAU) and its baselines."""
+from repro.core import aau, baselines, consensus, pathsearch, scheduler, straggler, topology
+from repro.core.aau import (
+    build_event_step,
+    debiased_average,
+    gossip_mix_dense,
+    masked_gossip_step,
+    ring_gossip,
+    tree_ring_gossip,
+)
+from repro.core.baselines import (
+    ADPSGDScheduler,
+    AGPScheduler,
+    PragueScheduler,
+    make_scheduler,
+)
+from repro.core.pathsearch import PathSearchState
+from repro.core.runner import DecentralizedTrainer, RunResult, run_algorithms
+from repro.core.scheduler import AAUScheduler, ScheduleEvent, Scheduler, SyncScheduler
+from repro.core.straggler import StragglerModel
+from repro.core.topology import Graph

@@ -1,0 +1,204 @@
+"""Baseline schedulers the paper compares against (§6): AD-PSGD, Prague, AGP.
+
+Each baseline is expressed as a scheduler emitting the same ``ScheduleEvent``
+stream as DSGD-AAU, so the *identical* JAX update (core/aau.py) runs all
+algorithms — only the (N(k), P(k)) sequence differs.  This mirrors the paper's
+framing where every algorithm is an instance of eq. (5) with a different
+consensus-matrix process.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Dict, Iterator, List, Set, Tuple
+
+import numpy as np
+
+from repro.core.scheduler import Scheduler, ScheduleEvent
+from repro.core.straggler import StragglerModel
+from repro.core.topology import Graph
+
+
+class ADPSGDScheduler(Scheduler):
+    """AD-PSGD [Lian et al. 2018].
+
+    A worker that finishes its gradient immediately averages pairwise with one
+    uniformly-random graph-neighbor and restarts; the neighbor is *not*
+    interrupted — its in-flight gradient will later be applied to the averaged
+    parameters (staleness).  Atomic-update requirement (paper §3 / Prague's
+    motivation): conflicting concurrent averagings must serialize, so each
+    average occupies the "update lock" for ``avg_time`` virtual seconds and
+    queued workers wait — the throughput ceiling that makes AD-PSGD stop
+    scaling with N.  P(k) is doubly stochastic: identity except a 2×2 block
+    of 1/2.
+    """
+
+    name = "ad_psgd"
+
+    def __init__(self, graph: Graph, straggler: StragglerModel, seed: int = 1,
+                 avg_time: float = 0.05):
+        super().__init__(graph, straggler)
+        self._rng = np.random.default_rng(seed)
+        self.avg_time = avg_time * straggler.base_time
+
+    def events(self) -> Iterator[ScheduleEvent]:
+        n = self.n
+        heap: List[Tuple[float, int]] = []
+        for i in range(n):
+            heapq.heappush(heap, (self.sampler.sample(i), i))
+        k = 0
+        lock_free_at = 0.0
+        while True:
+            t, i = heapq.heappop(heap)
+            t = max(t, lock_free_at) + self.avg_time   # serialized averaging
+            lock_free_at = t
+            nbrs = self.graph.neighbors(i)
+            P = np.eye(n)
+            edges: Tuple[Tuple[int, int], ...] = ()
+            copies = 0
+            if len(nbrs):
+                r = int(self._rng.choice(nbrs))
+                P[i, i] = P[r, r] = 0.5
+                P[i, r] = P[r, i] = 0.5
+                edges = ((min(i, r), max(i, r)),)
+                copies = 2
+            yield ScheduleEvent(
+                k=k, time=t,
+                grad_workers=self._mask([i]),
+                restart_workers=self._mask([i]),  # neighbor keeps its stale snapshot
+                P=P, active_edges=edges, param_copies_sent=copies,
+            )
+            k += 1
+            heapq.heappush(heap, (t + self.sampler.sample(i), i))
+
+
+class PragueScheduler(Scheduler):
+    """Prague [Luo et al. 2020]: partial all-reduce over randomized groups.
+
+    A Group Generator assigns each finishing worker to a random group of size
+    ``group_size``; the group's partial all-reduce fires once *all* members
+    have finished their current local computation, then members restart.
+    Groups are logical (not topology-constrained), as in the paper.  Because
+    membership is random, stragglers still land in groups and stall their
+    groupmates — the effect DSGD-AAU avoids.
+    """
+
+    name = "prague"
+
+    def __init__(self, graph: Graph, straggler: StragglerModel,
+                 group_size: int = 4, seed: int = 2):
+        super().__init__(graph, straggler)
+        self.group_size = max(2, min(group_size, graph.n))
+        self._rng = np.random.default_rng(seed)
+
+    def events(self) -> Iterator[ScheduleEvent]:
+        n = self.n
+        heap: List[Tuple[float, int]] = []
+        for i in range(n):
+            heapq.heappush(heap, (self.sampler.sample(i), i))
+        in_group: Dict[int, int] = {}          # worker -> group id
+        groups: Dict[int, Set[int]] = {}       # group id -> members
+        ready: Dict[int, Set[int]] = {}        # group id -> members finished
+        next_gid = 0
+        k = 0
+        while True:
+            t, i = heapq.heappop(heap)
+            if i not in in_group:
+                # Group Generator: form a fresh group around i from workers
+                # not currently claimed by a pending group.
+                free = [w for w in range(n) if w != i and w not in in_group]
+                size = min(self.group_size - 1, len(free))
+                members = {i} | set(
+                    int(x) for x in self._rng.choice(free, size=size, replace=False)
+                ) if size > 0 else {i}
+                gid = next_gid
+                next_gid += 1
+                groups[gid] = members
+                ready[gid] = set()
+                for m in members:
+                    in_group[m] = gid
+            gid = in_group[i]
+            ready[gid].add(i)
+            if ready[gid] != groups[gid]:
+                continue  # group still waiting on a member (possibly a straggler)
+            members = sorted(groups[gid])
+            g = len(members)
+            P = np.eye(n)
+            for a in members:
+                for b in members:
+                    P[a, b] = 1.0 / g
+            edges = tuple(
+                (members[x], members[y]) for x in range(g) for y in range(x + 1, g)
+            )
+            mask = self._mask(members)
+            yield ScheduleEvent(
+                k=k, time=t, grad_workers=mask, restart_workers=mask, P=P,
+                active_edges=edges,
+                # ring partial all-reduce: 2·(g−1)/g vector-copies per member
+                param_copies_sent=2 * (g - 1),
+            )
+            k += 1
+            for m in members:
+                del in_group[m]
+                heapq.heappush(heap, (t + self.sampler.sample(m), m))
+            del groups[gid], ready[gid]
+
+
+class AGPScheduler(Scheduler):
+    """Asynchronous Gradient Push [Assran & Rabbat 2020].
+
+    Push-sum on a directed view of the graph: a finishing worker applies its
+    gradient, keeps half of its (parameter, weight) mass and pushes the other
+    half to one random out-neighbor.  In the paper's W·P(k) orientation
+    (out_j = Σ_i P_ij·W_i) the push matrix is *row*-stochastic only (each
+    sender's row distributes its mass), i.e. the transpose of the
+    column-stochastic matrix in AGP's x ← A·x notation; the runner de-biases
+    estimates with the push-sum weight vector y(k) = y(k−1)·P(k).
+    """
+
+    name = "agp"
+
+    def __init__(self, graph: Graph, straggler: StragglerModel, seed: int = 3):
+        super().__init__(graph, straggler)
+        self._rng = np.random.default_rng(seed)
+
+    def events(self) -> Iterator[ScheduleEvent]:
+        n = self.n
+        heap: List[Tuple[float, int]] = []
+        for i in range(n):
+            heapq.heappush(heap, (self.sampler.sample(i), i))
+        k = 0
+        while True:
+            t, i = heapq.heappop(heap)
+            nbrs = self.graph.neighbors(i)
+            P = np.eye(n)
+            edges: Tuple[Tuple[int, int], ...] = ()
+            copies = 0
+            if len(nbrs):
+                r = int(self._rng.choice(nbrs))
+                # sender i's ROW splits its mass between i and r
+                P[i, i] = 0.5
+                P[i, r] = 0.5
+                edges = ((min(i, r), max(i, r)),)
+                copies = 1  # one directed push
+            yield ScheduleEvent(
+                k=k, time=t,
+                grad_workers=self._mask([i]),
+                restart_workers=self._mask([i]),
+                P=P, active_edges=edges, param_copies_sent=copies,
+            )
+            k += 1
+            heapq.heappush(heap, (t + self.sampler.sample(i), i))
+
+
+def make_scheduler(name: str, graph: Graph, straggler: StragglerModel, **kw) -> Scheduler:
+    from repro.core.scheduler import AAUScheduler, SyncScheduler
+    table = {
+        "dsgd_aau": AAUScheduler,
+        "dsgd_sync": SyncScheduler,
+        "ad_psgd": ADPSGDScheduler,
+        "prague": PragueScheduler,
+        "agp": AGPScheduler,
+    }
+    if name not in table:
+        raise KeyError(f"unknown algorithm {name!r}; have {sorted(table)}")
+    return table[name](graph, straggler, **kw)

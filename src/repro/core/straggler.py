@@ -1,0 +1,53 @@
+"""Worker compute-time models (the paper's straggler protocol, §6 + appendix D).
+
+The paper randomly selects workers as stragglers each iteration with
+probability ``p`` ("straggler probability", default 10%); a straggler's local
+computation is slowed by a factor ``s`` (ablated 5×–40×, default 10×; 6× in
+§6).  We add optional persistent heterogeneity (lognormal base speeds) to
+model heterogeneous hardware, and a deterministic seed so every experiment is
+reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerModel:
+    n: int
+    straggler_prob: float = 0.10          # paper default 10%
+    slowdown: float = 10.0                # paper default 10× (6× in §6 example)
+    base_time: float = 1.0                # mean local-gradient time (virtual seconds)
+    heterogeneity: float = 0.0            # lognormal sigma of persistent per-worker speed
+    jitter: float = 0.05                  # iid lognormal noise per computation
+    seed: int = 0
+
+    def make_sampler(self) -> "TimeSampler":
+        return TimeSampler(self)
+
+
+class TimeSampler:
+    """Stateful sampler: ``sample(worker) -> duration`` of one local gradient."""
+
+    def __init__(self, model: StragglerModel):
+        self.model = model
+        self._rng = np.random.default_rng(model.seed)
+        if model.heterogeneity > 0:
+            self.base = model.base_time * self._rng.lognormal(
+                mean=0.0, sigma=model.heterogeneity, size=model.n)
+        else:
+            self.base = np.full(model.n, model.base_time)
+
+    def sample(self, worker: int) -> float:
+        m = self.model
+        t = self.base[worker]
+        if m.jitter > 0:
+            t *= self._rng.lognormal(mean=0.0, sigma=m.jitter)
+        if self._rng.random() < m.straggler_prob:
+            t *= m.slowdown
+        return float(t)
+
+    def sample_all(self) -> np.ndarray:
+        return np.array([self.sample(i) for i in range(self.model.n)])

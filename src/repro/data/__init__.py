@@ -1,0 +1,2 @@
+from repro.data.pipeline import TokenStream, TokenStreamConfig
+from repro.data.synthetic import CharLMData, ClassificationData

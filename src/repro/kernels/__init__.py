@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (DESIGN.md §5).
+
+Each kernel ships as <name>/kernel.py (pl.pallas_call + BlockSpec),
+<name>/ops.py (jitted wrapper) and <name>/ref.py (pure-jnp oracle);
+tests sweep shapes/dtypes against the oracle in interpret mode.
+"""
+from repro.kernels import gossip_mix, linear_scan, swa_attention

@@ -1,0 +1,4 @@
+from repro.kernels.gossip_mix import ops, ref
+from repro.kernels.gossip_mix.kernel import gossip_mix_pallas
+from repro.kernels.gossip_mix.ops import gossip_mix
+from repro.kernels.gossip_mix.ref import gossip_mix_ref

@@ -1,0 +1,44 @@
+"""Jitted wrapper for gossip_mix: shape guards, padding, CPU interpret fallback.
+
+Handles arbitrary leaf shapes by flattening to (N, D), padding D up to the
+lane-aligned tile and N up to the sublane boundary (padding P with identity
+rows so padded workers mix with nobody).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.gossip_mix.kernel import gossip_mix_pallas
+
+_SUBLANE = 8
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gossip_mix(W: jax.Array, P: jax.Array, *, block_d: int = 512,
+               interpret: bool | None = None) -> jax.Array:
+    """Mix worker-stacked parameters: out = Pᵀ·W for any W of shape (N, ...)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    N = W.shape[0]
+    orig_shape = W.shape
+    flat = W.reshape(N, -1)
+    D = flat.shape[1]
+    Dp = -(-D // block_d) * block_d
+    Np = -(-N // _SUBLANE) * _SUBLANE
+    if Dp != D:
+        flat = jnp.pad(flat, ((0, 0), (0, Dp - D)))
+    if Np != N:
+        flat = jnp.pad(flat, ((0, Np - N), (0, 0)))
+        P = jnp.pad(P, ((0, Np - N), (0, Np - N)))
+        P = P.at[jnp.arange(N, Np), jnp.arange(N, Np)].set(1.0)
+    out = gossip_mix_pallas(flat, P.astype(flat.dtype), block_d=block_d,
+                            interpret=interpret)
+    return out[:N, :D].reshape(orig_shape)

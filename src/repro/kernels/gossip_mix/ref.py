@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the gossip_mix kernel."""
+import jax.numpy as jnp
+import jax
+
+
+def gossip_mix_ref(W: jax.Array, P: jax.Array) -> jax.Array:
+    """out[j, d] = Σ_i P[i, j] · W[i, d]  ==  Pᵀ @ W."""
+    return jnp.einsum("nd,nj->jd", W.astype(jnp.float32),
+                      P.astype(jnp.float32)).astype(W.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.linear_scan import ops, ref
+from repro.kernels.linear_scan.kernel import linear_scan_pallas
+from repro.kernels.linear_scan.ops import linear_scan
+from repro.kernels.linear_scan.ref import linear_scan_ref

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: blocked diagonal linear recurrence  h_t = a_t ⊙ h_{t-1} + x_t.
+
+Serves RWKV6's data-dependent-decay state update and RecurrentGemma's RG-LRU
+(DESIGN.md §5).  Inputs (B, T, D); the grid is (B, D-tiles, T-tiles) with the
+T dimension innermost — TPU grids iterate the last axis sequentially, so the
+running state for each (batch, channel-tile) lives in a VMEM scratch
+accumulator carried across T-tiles.  Within a tile the recurrence is a short
+``fori_loop`` over rows (each step one (Dt,)-lane VPU fma).
+
+VMEM per step: 3 · Tt · Dt · 4B + Dt · 4B  (e.g. 128×512 → 0.8 MB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(a_ref, x_ref, o_ref, carry_ref):
+    t_idx = pl.program_id(2)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        carry_ref[...] = jnp.zeros_like(carry_ref)
+
+    a = a_ref[0].astype(jnp.float32)       # (Tt, Dt)
+    x = x_ref[0].astype(jnp.float32)
+    bt = a.shape[0]
+
+    def body(i, h):
+        h = a[i] * h + x[i]
+        o_ref[0, i, :] = h.astype(o_ref.dtype)
+        return h
+
+    h0 = carry_ref[0]
+    h = jax.lax.fori_loop(0, bt, body, h0)
+    carry_ref[0] = h
+
+
+def linear_scan_pallas(a: jax.Array, x: jax.Array, *, block_t: int = 128,
+                       block_d: int = 512, interpret: bool = False) -> jax.Array:
+    """a, x: (B, T, D) with T % block_t == 0 and D % block_d == 0."""
+    B, T, D = a.shape
+    assert x.shape == (B, T, D)
+    assert T % block_t == 0 and D % block_d == 0, (T, D, block_t, block_d)
+    grid = (B, D // block_d, T // block_t)   # T innermost → sequential carry
+    spec = pl.BlockSpec((1, block_t, block_d), lambda b, d, t: (b, t, d))
+    return pl.pallas_call(
+        _scan_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, D), x.dtype),
+        scratch_shapes=[pltpu.VMEM((1, block_d), jnp.float32)],
+        interpret=interpret,
+    )(a, x)

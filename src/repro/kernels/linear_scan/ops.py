@@ -1,0 +1,38 @@
+"""Jitted wrapper for linear_scan: padding + interpret fallback on CPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.linear_scan.kernel import linear_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_d", "interpret"))
+def linear_scan(a: jax.Array, x: jax.Array, *, block_t: int = 128,
+                block_d: int = 512, interpret: bool | None = None) -> jax.Array:
+    """Diagonal linear recurrence over axis 1 for (B, T, D) inputs.
+
+    Pads T up to block_t (a=1, x=0 padding is recurrence-neutral at the tail)
+    and D up to block_d.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, T, D = a.shape
+    bt = min(block_t, T) if T % block_t else block_t
+    if T % bt:
+        pad_t = -(-T // bt) * bt - T
+        a = jnp.pad(a, ((0, 0), (0, pad_t), (0, 0)), constant_values=1.0)
+        x = jnp.pad(x, ((0, 0), (0, pad_t), (0, 0)))
+    bd = min(block_d, D) if D % block_d else block_d
+    if D % bd:
+        pad_d = -(-D // bd) * bd - D
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, pad_d)), constant_values=1.0)
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad_d)))
+    out = linear_scan_pallas(a, x, block_t=bt, block_d=bd, interpret=interpret)
+    return out[:, :T, :D]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the linear_scan kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(a: jax.Array, x: jax.Array) -> jax.Array:
+    """h_t = a_t ⊙ h_{t-1} + x_t over axis 1, h_0 = 0.  a, x: (B, T, D)."""
+    def step(h, ax):
+        at, xt = ax
+        h = at * h + xt
+        return h, h
+
+    a32 = a.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    aT = jnp.swapaxes(a32, 0, 1)
+    xT = jnp.swapaxes(x32, 0, 1)
+    _, hs = jax.lax.scan(step, jnp.zeros_like(x32[:, 0]), (aT, xT))
+    return jnp.swapaxes(hs, 0, 1).astype(x.dtype)

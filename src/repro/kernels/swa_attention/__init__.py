@@ -1,0 +1,4 @@
+from repro.kernels.swa_attention import ops, ref
+from repro.kernels.swa_attention.kernel import swa_attention_pallas
+from repro.kernels.swa_attention.ops import swa_attention
+from repro.kernels.swa_attention.ref import swa_attention_ref

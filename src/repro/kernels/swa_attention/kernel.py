@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: sliding-window flash attention (prefill).
+
+Used by the long-context path of the dense/audio/vlm archs and by
+RecurrentGemma's local-attention blocks.  Online-softmax over k-blocks with
+the *block-sparse band* optimization: for window w only the
+``1 + ceil((w + bq − 1)/bk)`` diagonal k-blocks per q-block are visited, so
+compute is O(T·w) instead of O(T²).
+
+Grid: (B·H, q-blocks, band-offsets), band innermost (sequential) so the
+accumulator / running-max / running-denominator scratch carries across the
+band.  GQA is handled by the k/v index map (kv head = head // group).
+
+VMEM per step: q(bq·dh) + k,v(2·bk·dh) + acc(bq·dh) + m,l — e.g.
+bq=bk=256, dh=128 → ~0.6 MB, all f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _swa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                block_q: int, block_k: int, window: int, n_band: int,
+                scale: float):
+    qi = pl.program_id(1)
+    off = pl.program_id(2)
+
+    @pl.when(off == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    hi = (qi * block_q + block_q - 1) // block_k       # diagonal k-block
+    kj = jnp.maximum(hi - off, 0)
+
+    @pl.when(hi - off >= 0)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)               # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)               # (bk, dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        pos_q = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        pos_k = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = (pos_k <= pos_q) & (pos_k > pos_q - window)
+        s = jnp.where(mask, s, -1e30)
+        m_prev = m_ref[...]                            # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = (acc_ref[...] * corr
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(off == n_band - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def swa_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         window: int, n_groups: int = 1, block_q: int = 256,
+                         block_k: int = 256, interpret: bool = False) -> jax.Array:
+    """q: (BH, T, dh); k, v: (BKV, T, dh) with BH = BKV · n_groups.
+
+    Heads are flattened into the leading dim batch-major (b·H + h) so
+    kv index = bh // n_groups.  Causal + window-w mask; same-length
+    self-attention (prefill).
+    """
+    BH, T, dh = q.shape
+    BKV = k.shape[0]
+    assert BH == BKV * n_groups, (BH, BKV, n_groups)
+    assert T % block_q == 0 and T % block_k == 0, (T, block_q, block_k)
+    n_band = 1 + int(np.ceil((window + block_q - 1) / block_k))
+    n_band = min(n_band, T // block_k)
+    grid = (BH, T // block_q, n_band)
+
+    def q_map(bh, qi, off):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, off):
+        hi = (qi * block_q + block_q - 1) // block_k
+        kj = jnp.maximum(hi - off, 0)
+        return (bh // n_groups, kj, 0)
+
+    kernel = functools.partial(
+        _swa_kernel, block_q=block_q, block_k=block_k, window=window,
+        n_band=n_band, scale=1.0 / np.sqrt(dh))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), q_map),
+            pl.BlockSpec((1, block_k, dh), kv_map),
+            pl.BlockSpec((1, block_k, dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), q_map),
+        out_shape=jax.ShapeDtypeStruct((BH, T, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, dh), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,47 @@
+"""Jitted wrapper for swa_attention: (B, T, H, dh) interface + GQA + padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.swa_attention.kernel import swa_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "block_q", "block_k", "interpret"))
+def swa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int,
+                  block_q: int = 256, block_k: int = 256,
+                  interpret: bool | None = None) -> jax.Array:
+    """Sliding-window causal self-attention.
+
+    q: (B, T, H, dh); k, v: (B, T, KV, dh) with H % KV == 0.  Returns
+    (B, T, H, dh).  T is padded up to the block size (padded queries attend
+    causally to real keys only; padded outputs are sliced away).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, T, H, dh = q.shape
+    KV = k.shape[2]
+    assert H % KV == 0, (H, KV)
+    groups = H // KV
+    bq = min(block_q, T)
+    bk = min(block_k, T)
+    Tp = -(-T // max(bq, bk)) * max(bq, bk)
+    if Tp != T:
+        pad = ((0, 0), (0, Tp - T), (0, 0), (0, 0))
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Tp, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, Tp, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, Tp, dh)
+    out = swa_attention_pallas(qf, kf, vf, window=window, n_groups=groups,
+                               block_q=bq, block_k=bk, interpret=interpret)
+    out = out.reshape(B, H, Tp, dh).transpose(0, 2, 1, 3)
+    return out[:, :T]

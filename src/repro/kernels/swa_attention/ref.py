@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for sliding-window causal attention."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def swa_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      window: int, n_groups: int = 1) -> jax.Array:
+    """q: (BH, T, dh); k, v: (BKV, T, dh), BH = BKV · n_groups."""
+    BH, T, dh = q.shape
+    kf = jnp.repeat(k, n_groups, axis=0)
+    vf = jnp.repeat(v, n_groups, axis=0)
+    s = jnp.einsum("htd,hsd->hts", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) / np.sqrt(dh)
+    pos = jnp.arange(T)
+    mask = (pos[None, :] <= pos[:, None]) & (pos[None, :] > pos[:, None] - window)
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hts,hsd->htd", p, vf.astype(jnp.float32)).astype(q.dtype)

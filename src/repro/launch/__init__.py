@@ -1,0 +1,1 @@
+"""Launch layer: production meshes, sharding policy, dry-run, train/serve CLIs."""

@@ -1,0 +1,393 @@
+"""Roofline analysis of compiled dry-run artifacts.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body **once**,
+so scan-over-layers programs under-report FLOPs/bytes by ~n_layers×
+(verified: an unrolled 26-layer model matches its analytic FLOPs, a
+95-layer scanned model reads ~78× low).  We therefore run our own cost
+model over the optimized HLO text:
+
+  * computations are parsed into symbol tables (op name → shape);
+  * a call graph (fusion ``calls=``, ``while`` body/cond, conditionals)
+    assigns every computation a trip multiplier — while trip counts are
+    recovered from the loop-bound constant in the condition region;
+  * FLOPs: 2·|result|·|contraction| for every ``dot`` (matmul FLOPs dominate
+    all our programs; elementwise FLOPs are ignored, documented);
+  * HBM bytes: 2× the produced bytes of every op at non-fusion level
+    (each buffer is written once and read ≈once downstream) plus the entry
+    parameters read once — a traffic *proxy* that stays exact-scale through
+    while loops, where fusion-operand counting would bill the whole stacked
+    weight array per layer instead of the dynamic-slice actually read;
+  * collective bytes: operand bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute.
+
+All values are per-device (the SPMD partition's program) — verified against
+a hand-sharded matmul.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+~50 GB/s/link ICI (brief §Roofline).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\b([a-z][a-z0-9\-_]*)\(")
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+
+
+def _dims(dims_s: str) -> int:
+    n = 1
+    if dims_s:
+        for d in dims_s.split(","):
+            n *= int(d)
+    return n
+
+
+def _first_shape(text: str) -> Optional[Tuple[str, str]]:
+    m = _SHAPE_RE.search(text)
+    return (m.group(1), m.group(2)) if m else None
+
+
+def _all_shapes_bytes(text: str) -> int:
+    return sum(_DTYPE_BYTES[dt] * _dims(ds) for dt, ds in _SHAPE_RE.findall(text))
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    line: str
+    args: str                             # text after the opcode's "("
+    shape: Optional[Tuple[str, str]]      # (dtype, dims) of result (first shape)
+    result_bytes: int                     # total incl. tuple results
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: List[Op]
+    symbols: Dict[str, Tuple[str, str]]
+
+
+def parse_hlo(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s:
+            continue
+        if s.endswith("{") and ("->" in s or s.startswith(("ENTRY", "%"))):
+            m = _HEADER_RE.match(s)
+            if m:
+                cur = Computation(name=m.group(2), is_entry=bool(m.group(1)),
+                                  ops=[], symbols={})
+                comps[cur.name] = cur
+                continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        nm = _NAME_RE.match(s)
+        if not nm:
+            continue
+        rest = s[nm.end():]
+        om = _OPCODE_RE.search(rest)
+        if not om:
+            continue
+        name = nm.group(1)
+        opcode = om.group(1)
+        head = rest[: om.start()]          # result type text
+        shape = _first_shape(head)
+        cur.ops.append(Op(name=name, opcode=opcode, line=s,
+                          args=rest[om.end():], shape=shape,
+                          result_bytes=_all_shapes_bytes(head)))
+        if shape:
+            cur.symbols[name] = shape
+    return comps
+
+
+# ---------------------------------------------------------------------------
+# Call graph and trip multipliers
+# ---------------------------------------------------------------------------
+
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TFCOMP_RE = re.compile(r"(?:true|false)_computation=%?([\w\.\-]+)")
+
+
+def _trip_count(cond: Computation, comps: Dict[str, Computation]) -> int:
+    """Largest integer constant reachable in the condition region."""
+    best = 1
+    seen = set()
+
+    def visit(c: Computation):
+        if c.name in seen:
+            return
+        seen.add(c.name)
+        nonlocal best
+        for op in c.ops:
+            for m in re.finditer(r"constant\((\d+)\)", op.line):
+                best = max(best, int(m.group(1)))
+            cm = _CALLS_RE.search(op.line)
+            if cm and cm.group(1) in comps:
+                visit(comps[cm.group(1)])
+
+    visit(cond)
+    return best
+
+
+def multipliers(comps: Dict[str, Computation]) -> Tuple[Dict[str, float], Dict[str, bool]]:
+    """(trip multiplier per computation, is-fusion-internal flag)."""
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    fusion_internal: Dict[str, bool] = {name: False for name in comps}
+    if entry is None:
+        return {name: 1.0 for name in comps}, fusion_internal
+
+    # gather edges: (caller, callee, factor, via_fusion)
+    edges: List[Tuple[str, str, float, bool]] = []
+    for c in comps.values():
+        for op in c.ops:
+            wm = _WHILE_RE.search(op.line)
+            if op.opcode == "while" and wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(comps[cond], comps) if cond in comps else 1
+                edges.append((c.name, body, float(trips), False))
+                edges.append((c.name, cond, float(trips), False))
+                continue
+            cm = _CALLS_RE.search(op.line)
+            if cm and op.opcode == "fusion":
+                edges.append((c.name, cm.group(1), 1.0, True))
+            elif cm:
+                edges.append((c.name, cm.group(1), 1.0, False))
+            bm = _BRANCH_RE.search(op.line)
+            if bm:
+                branches = [b for b in re.findall(r"%?([\w\.\-]+)", bm.group(1))
+                            if b in comps]
+                # expected-value weighting: exactly one branch executes per
+                # visit (the causal-frontier conditional in blockwise
+                # attention would otherwise be double-counted)
+                for b in branches:
+                    edges.append((c.name, b, 1.0 / max(len(branches), 1), False))
+            tf = list(_TFCOMP_RE.finditer(op.line))
+            for tm in tf:
+                edges.append((c.name, tm.group(1), 1.0 / max(len(tf), 1), False))
+
+    mult[entry] = 1.0
+    # propagate in topological-ish order (iterate to fixpoint; DAG, small)
+    for _ in range(len(comps)):
+        changed = False
+        new = {name: 0.0 for name in comps}
+        new[entry] = 1.0
+        for caller, callee, f, via_fusion in edges:
+            new[callee] += mult.get(caller, 0.0) * f
+        for caller, callee, f, via_fusion in edges:
+            if via_fusion:
+                fusion_internal[callee] = True
+        for name in comps:
+            if abs(new[name] - mult[name]) > 1e-9:
+                changed = True
+        mult = new
+        if not changed:
+            break
+    # fusion-internal propagates transitively
+    for _ in range(4):
+        for caller, callee, f, via in edges:
+            if fusion_internal.get(caller):
+                fusion_internal[callee] = True
+    return mult, fusion_internal
+
+
+# ---------------------------------------------------------------------------
+# FLOPs / bytes / collectives
+# ---------------------------------------------------------------------------
+
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_SKIP_BYTES_OPS = {"parameter", "tuple", "get-tuple-element", "bitcast",
+                   "constant", "after-all", "partition-id", "replica-id",
+                   "iota",
+                   # control ops whose "result" aliases carried buffers —
+                   # their traffic happens inside their called computations
+                   "while", "conditional", "call"}
+
+
+def _dot_flops(op: Op, symbols: Dict[str, Tuple[str, str]]) -> float:
+    if op.shape is None:
+        return 0.0
+    res = _dims(op.shape[1])
+    m = _LHS_CONTRACT_RE.search(op.line)
+    if not m:
+        return 2.0 * res  # degenerate
+    lhs_name = op.args.split(",")[0].strip().rstrip(")").lstrip("%")
+    lhs = symbols.get(lhs_name)
+    if lhs is None:
+        return 2.0 * res
+    lhs_dims = [int(d) for d in lhs[1].split(",")] if lhs[1] else []
+    contract = 1
+    for idx in (int(i) for i in m.group(1).split(",") if i):
+        if idx < len(lhs_dims):
+            contract *= lhs_dims[idx]
+    return 2.0 * res * contract
+
+
+def _fusion_dus_bytes(comp: Optional[Computation]) -> Optional[int]:
+    """If a fusion's root is (a bitcast of) dynamic-update-slice, the bytes
+    of the update operand; else None."""
+    if comp is None or not comp.ops:
+        return None
+    root = comp.ops[-1]
+    target = root
+    if root.opcode in ("bitcast", "convert") and root.args:
+        nm = root.args.split(")", 1)[0].strip().lstrip("%")
+        for op in comp.ops:
+            if op.name == nm:
+                target = op
+                break
+    for op in (target, *comp.ops[::-1]):
+        if op.opcode == "dynamic-update-slice":
+            names = re.findall(r"%([\w\.\-]+)", op.args.split(")", 1)[0])
+            if len(names) > 1:
+                upd = comp.symbols.get(names[1])
+                if upd:
+                    return _DTYPE_BYTES[upd[0]] * _dims(upd[1])
+            return None
+    return None
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, float]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    hbm_bytes: float
+    collectives: CollectiveStats
+
+
+def analyze_hlo_text(hlo: str) -> HloCost:
+    comps = parse_hlo(hlo)
+    mult, fusion_internal = multipliers(comps)
+    flops = 0.0
+    hbm = 0.0
+    coll_bytes = {k: 0.0 for k in _COLLECTIVES}
+    coll_count = {k: 0.0 for k in _COLLECTIVES}
+    for c in comps.values():
+        m = mult.get(c.name, 0.0)
+        if m == 0.0:
+            continue
+        for op in c.ops:
+            if op.opcode == "dot":
+                flops += m * _dot_flops(op, c.symbols)
+            if fusion_internal.get(c.name):
+                continue
+            if op.opcode == "parameter" and c.is_entry:
+                hbm += op.result_bytes          # inputs read once per step
+                continue
+            if op.opcode in _SKIP_BYTES_OPS:
+                continue
+            if op.opcode == "dynamic-update-slice":
+                # in-place aliased: traffic is the update operand, not the
+                # full result buffer
+                names = re.findall(r"%([\w\.\-]+)", op.args.split(")", 1)[0])
+                upd = c.symbols.get(names[1]) if len(names) > 1 else None
+                b = _DTYPE_BYTES[upd[0]] * _dims(upd[1]) if upd else op.result_bytes
+                hbm += m * 2.0 * b
+                continue
+            if op.opcode == "fusion":
+                # fusions rooted in a dynamic-update-slice alias their output
+                # buffer: bill the updated slice, not the whole buffer
+                cm = _CALLS_RE.search(op.line)
+                dus = _fusion_dus_bytes(comps.get(cm.group(1))) if cm else None
+                if dus is not None:
+                    hbm += m * 2.0 * dus
+                    continue
+            hbm += m * 2.0 * op.result_bytes    # write + downstream read
+            base = op.opcode.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not op.opcode.endswith("-done"):
+                operand_bytes = 0
+                arg_head = op.args.split(")", 1)[0]
+                for nm2 in re.findall(r"%([\w\.\-]+)", arg_head):
+                    sh = c.symbols.get(nm2)
+                    if sh:
+                        operand_bytes += _DTYPE_BYTES[sh[0]] * _dims(sh[1])
+                if operand_bytes == 0:
+                    operand_bytes = op.result_bytes
+                coll_bytes[base] += m * operand_bytes
+                coll_count[base] += m
+    return HloCost(flops=flops, hbm_bytes=hbm,
+                   collectives=CollectiveStats(coll_bytes, coll_count))
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Roofline:
+    """Per-device-per-step seconds for the three roofline terms (values are
+    the SPMD partition's — numerically equal to global/(chips·peak))."""
+    flops: float                 # matmul FLOPs per device per step
+    hbm_bytes: float             # HBM traffic proxy per device per step
+    coll_bytes: float            # collective operand bytes per device per step
+    n_devices: int
+    model_flops: float = 0.0     # 6·N·D analytic (global)
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+
+    def finalize(self) -> "Roofline":
+        self.compute_s = self.flops / PEAK_FLOPS
+        self.memory_s = self.hbm_bytes / HBM_BW
+        self.collective_s = self.coll_bytes / ICI_BW
+        return self
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        tot = self.flops * self.n_devices
+        return self.model_flops / tot if tot else 0.0
+
+
+def analyze(compiled, n_devices: int, model_flops: float) -> Tuple[Roofline, CollectiveStats]:
+    cost = analyze_hlo_text(compiled.as_text())
+    rl = Roofline(flops=cost.flops, hbm_bytes=cost.hbm_bytes,
+                  coll_bytes=cost.collectives.total_bytes,
+                  n_devices=n_devices, model_flops=model_flops).finalize()
+    return rl, cost.collectives
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Back-compat helper used by tests."""
+    return analyze_hlo_text(hlo_text).collectives

@@ -1,0 +1,110 @@
+"""Assigned input shapes and abstract input specs for the dry-run.
+
+``input_specs`` returns (ShapeDtypeStruct pytree, PartitionSpec pytree) for
+every (architecture × input shape × mode) — weak-type-correct, shardable,
+zero device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import TrainAxes
+from repro.launch.sharding import batch_pspec, serve_pspecs
+from repro.models.transformer import init_decode_state
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str          # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1),
+}
+
+SWA_WINDOW = 8192  # rolling window for the long_500k variant on quadratic archs
+
+
+def shape_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Arch variant actually lowered for this shape (SWA for long_500k)."""
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return cfg.with_sliding_window(SWA_WINDOW)
+    return cfg
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Train inputs: batch stacked per worker — {tokens (nw, B_w, S), [prefix]}
+# ---------------------------------------------------------------------------
+
+def train_input_specs(cfg: ModelConfig, shape: InputShape, n_workers: int,
+                      axes: TrainAxes, *, seq_shard: bool = True):
+    if shape.global_batch % n_workers:
+        raise ValueError(f"{shape.global_batch} batch !% {n_workers} workers")
+    bw = shape.global_batch // n_workers
+    batch = {"tokens": sds((n_workers, bw, shape.seq_len), jnp.int32)}
+    if cfg.frontend:
+        batch["prefix"] = sds((n_workers, bw, cfg.n_prefix_tokens, cfg.d_model),
+                              cfg.cdtype)
+    specs = batch_pspec(batch, axes.worker_axes, axes.fsdp,
+                        seq_axis=axes.model if seq_shard else None)
+    return batch, specs
+
+
+# ---------------------------------------------------------------------------
+# Serve inputs (decode): token (B,), state pytree, pos scalar
+# ---------------------------------------------------------------------------
+
+def _data_axes(mesh):
+    """The data-like axis for serving: ("pod","data") on the multi-pod mesh."""
+    return ("pod", "data") if "pod" in mesh.shape else "data"
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape, mesh):
+    B = shape.global_batch
+    da = _data_axes(mesh)
+    dsize = (mesh.shape["pod"] * mesh.shape["data"] if isinstance(da, tuple)
+             else mesh.shape["data"])
+    state = jax.eval_shape(
+        lambda: init_decode_state(cfg, B, shape.seq_len, filled=True))
+    token = sds((B,), jnp.int32)
+    pos = sds((), jnp.int32)
+    state_specs = serve_pspecs(state, mesh, data=da)
+    token_spec = P(da) if B % dsize == 0 else (
+        P("data") if B % mesh.shape["data"] == 0 else P())
+    return ({"token": token, "state": state, "pos": pos},
+            {"token": token_spec, "state": state_specs, "pos": P()})
+
+
+# ---------------------------------------------------------------------------
+# Prefill inputs: tokens (B, S) [+ prefix]
+# ---------------------------------------------------------------------------
+
+def prefill_input_specs(cfg: ModelConfig, shape: InputShape, mesh):
+    B = shape.global_batch
+    da = _data_axes(mesh)
+    dsize = (mesh.shape["pod"] * mesh.shape["data"] if isinstance(da, tuple)
+             else mesh.shape["data"])
+    baxis = da if B % dsize == 0 else (
+        "data" if B % mesh.shape["data"] == 0 else None)
+    batch = {"tokens": sds((B, shape.seq_len), jnp.int32)}
+    specs = {"tokens": P(baxis, "model")}
+    if cfg.frontend:
+        batch["prefix"] = sds((B, cfg.n_prefix_tokens, cfg.d_model), cfg.cdtype)
+        specs["prefix"] = P(baxis, None, None)
+    return batch, specs

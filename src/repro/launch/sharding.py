@@ -1,0 +1,179 @@
+"""Sharding policy: parameter/batch/cache PartitionSpecs for every arch.
+
+A path-based rule engine assigns each parameter leaf a PartitionSpec over
+(fsdp, model) — "contracting-in" matrices shard (fsdp → model), "projecting-
+out" matrices shard (model → fsdp), expert stacks shard E over model when
+divisible (expert parallelism), everything else falls back toward replication
+when a dimension does not divide the axis size.  The same rules serve
+training (fsdp axis = "fsdp" inside a worker replica) and serving (fsdp axis
+= "data" — ZeRO-style fully-sharded inference).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# matrices whose *first* matmul dim is the big contraction (out-projections)
+_OUT_PROJ = ("wo", "w_down", "w_out", "w_v")   # w_v = rwkv channel-mix down-proj
+_SMALL = ("ln", "norm", "bias", "mu_", "decay_w0", "lam", "bonus_u",
+          "conv_kernel", "conv_bias", "b_a", "b_x", "router", "decay_A",
+          "decay_B")
+
+
+def _div(dim: int, mesh: Mesh, axis) -> Optional[object]:
+    """axis if dim divides its (product) size and exists in the mesh, else
+    None.  ``axis`` may be a name or a tuple of names (e.g. ("pod","data") —
+    multi-pod serving treats both as one data-like axis)."""
+    if axis is None:
+        return None
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    size = 1
+    for a in axes:
+        if a not in mesh.shape:
+            return None
+        size *= mesh.shape[a]
+    return axis if dim % size == 0 else None
+
+
+def leaf_spec(path_s: str, shape: Tuple[int, ...], mesh: Mesh,
+              fsdp: Optional[str], model: str,
+              stacked_layers: bool, embed_vocab_shard: bool = False) -> P:
+    """PartitionSpec for one (un-worker-stacked) parameter leaf."""
+    nd = len(shape)
+    leading: Tuple[Optional[str], ...] = ()
+    body = shape
+    if stacked_layers and nd >= 3 and not any(s in path_s for s in ("embed", "head")):
+        leading = (None,)            # layer-stack axis
+        body = shape[1:]
+        nd -= 1
+
+    name = path_s.rsplit("/", 1)[-1]
+    if any(s in path_s.rsplit("/", 2)[-1] or s in name for s in _SMALL) or nd <= 1:
+        return P(*(leading + (None,) * nd))
+
+    if nd == 3 and body[0] > 4:      # (E, d, f) expert stacks
+        e_axis = _div(body[0], mesh, model)
+        if e_axis:                   # expert parallel over model
+            return P(*(leading + (e_axis, _div(body[1], mesh, fsdp), None)))
+        # tensor-parallel within experts
+        if name in _OUT_PROJ:
+            return P(*(leading + (None, _div(body[1], mesh, model),
+                                  _div(body[2], mesh, fsdp))))
+        return P(*(leading + (None, _div(body[1], mesh, fsdp),
+                              _div(body[2], mesh, model))))
+
+    if nd == 2:
+        if "embed" in path_s:
+            if embed_vocab_shard:  # vocab-parallel: V over model, D over fsdp
+                return P(*(leading + (_div(body[0], mesh, model),
+                                      _div(body[1], mesh, fsdp))))
+            return P(*(leading + (_div(body[0], mesh, fsdp),
+                                  _div(body[1], mesh, model))))
+        if "head" in path_s:
+            if embed_vocab_shard:  # logits dim V over model
+                return P(*(leading + (_div(body[0], mesh, fsdp),
+                                      _div(body[1], mesh, model))))
+            return P(*(leading + (_div(body[0], mesh, fsdp),
+                                  _div(body[1], mesh, model))))
+        if name in _OUT_PROJ:
+            return P(*(leading + (_div(body[0], mesh, model),
+                                  _div(body[1], mesh, fsdp))))
+        return P(*(leading + (_div(body[0], mesh, fsdp),
+                              _div(body[1], mesh, model))))
+
+    return P(*(leading + (None,) * nd))
+
+
+def param_pspecs(params_shapes, mesh: Mesh, *, fsdp: Optional[str], model: str,
+                 worker_axes: Tuple[str, ...] = (),
+                 embed_vocab_shard: bool = False):
+    """Pytree of PartitionSpecs matching ``params_shapes`` (eval_shape output).
+
+    ``worker_axes`` non-empty → leaves carry a leading worker-stack dim
+    sharded over those axes (decentralized training state).
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params_shapes)[0]
+    # detect stacked layers: leaves under "layers/" with ndim>=3 share a leading L
+    specs = {}
+    for path, leaf in flat:
+        ps = _path_str(path)
+        stacked = ps.startswith("layers/") and not _is_unrolled(ps)
+        shape = leaf.shape
+        if worker_axes:
+            shape = shape[1:]
+        spec = leaf_spec(ps, shape, mesh, fsdp, model, stacked,
+                         embed_vocab_shard=embed_vocab_shard)
+        if worker_axes:
+            spec = P(worker_axes if len(worker_axes) > 1 else worker_axes[0],
+                     *tuple(spec))
+        specs[ps] = spec
+    # rebuild tree
+    leaves = [specs[_path_str(p)] for p, _ in flat]
+    treedef = jax.tree_util.tree_structure(params_shapes)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def _is_unrolled(path_s: str) -> bool:
+    # unrolled (hybrid) layers look like "layers/0/..." — numeric second part
+    parts = path_s.split("/")
+    return len(parts) > 1 and parts[1].isdigit()
+
+
+def batch_pspec(batch_shapes, worker_axes: Tuple[str, ...],
+                fsdp: Optional[str], seq_axis: Optional[str] = None):
+    """Specs for a train batch shaped (n_workers, per_worker_batch, S, ...).
+
+    Worker-stack dim over ``worker_axes``; per-worker batch over ``fsdp``;
+    sequence dim optionally over ``seq_axis`` (sequence parallelism — shrinks
+    the remat'd residual footprint by the model-axis size).
+    """
+    first = worker_axes if len(worker_axes) > 1 else worker_axes[0]
+
+    def spec(leaf):
+        nd = len(leaf.shape)
+        rest = [fsdp, seq_axis] + [None] * max(0, nd - 3)
+        return P(first, *rest[: nd - 1])
+
+    return jax.tree.map(spec, batch_shapes)
+
+
+def serve_pspecs(state_shapes, mesh: Mesh, *, data="data",
+                 model: str = "model", batch_first: bool = True):
+    """Specs for decode state: batch over data, heads (or head_dim) over model."""
+    def spec(leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        out = [None] * nd
+        # leading stacked-layer axis heuristics: (L, B, ...) when nd >= 3
+        b_idx = 0
+        if nd >= 2 and shape[0] <= 256 and nd >= 3:
+            b_idx = 1
+        if nd > b_idx:
+            out[b_idx] = _div(shape[b_idx], mesh, data)
+        # shard the largest remaining dim over model if divisible
+        rest = [(i, s) for i, s in enumerate(shape) if i > b_idx]
+        rest.sort(key=lambda t: -t[1])
+        for i, s in rest:
+            ax = _div(s, mesh, model)
+            if ax:
+                out[i] = ax
+                break
+        return P(*out)
+
+    return jax.tree.map(spec, state_shapes)

@@ -1,0 +1,11 @@
+from repro.models import layers, moe, multimodal, rglru, rwkv, transformer
+from repro.models.transformer import (
+    active_param_count,
+    block_pattern,
+    decode_step,
+    forward,
+    init_decode_state,
+    init_model,
+    lm_loss,
+    param_count,
+)

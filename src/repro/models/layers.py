@@ -1,0 +1,354 @@
+"""Shared model primitives (functional, pure JAX).
+
+Conventions:
+  * params are plain dict pytrees; ``init_*`` builds them, ``apply_*`` runs them.
+  * activations (B, T, D); attention heads (B, T, H, dh).
+  * all matmuls accumulate in float32 (``preferred_element_type``).
+  * attention over long sequences uses a blockwise (flash-style) jnp path so
+    the 32k/500k shapes lower with O(T·block) live memory — the Pallas
+    ``swa_attention`` kernel is the TPU-optimized version of the same math.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def matmul(x, w):
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, T, H, dh); positions: (T,) or (B, T) absolute token positions."""
+    dh = x.shape[-1]
+    freqs = rope_frequencies(dh, theta)                       # (dh/2,)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]   # (T, dh/2)
+        ang = ang[None, :, None, :]                                     # (1,T,1,dh/2)
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs          # (B,T,dh/2)
+        ang = ang[:, :, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional qk-norm, optional sliding window)
+# ---------------------------------------------------------------------------
+
+# Optional sharding-hint hook: the launch layer installs a callable
+# ``hint(x, dims)`` (dims ∈ {"bqhd","bshd","bhqs","bhqd"}) that applies
+# ``with_sharding_constraint`` with mesh-appropriate axes.  XLA's sharding
+# propagation loses the batch/head partitioning through the flash-attention
+# while-loop (measured: attention compute replicated across the data axis);
+# these hints pin it.  Default None — single-device tests are unaffected.
+_SHARD_HINT = None
+
+
+def set_attention_shard_hint(fn):
+    global _SHARD_HINT
+    _SHARD_HINT = fn
+
+
+def _hint(x, dims: str):
+    return _SHARD_HINT(x, dims) if _SHARD_HINT is not None else x
+
+def init_attention(key, cfg) -> dict:
+    d, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, H * dh), cfg.pdtype),
+        "wk": _dense_init(ks[1], (d, KV * dh), cfg.pdtype),
+        "wv": _dense_init(ks[2], (d, KV * dh), cfg.pdtype),
+        "wo": _dense_init(ks[3], (H * dh, d), cfg.pdtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh, cfg.pdtype)
+        p["k_norm"] = init_rmsnorm(dh, cfg.pdtype)
+    return p
+
+
+def _plain_attention(q, k, v, positions_q, positions_k, window):
+    """Materialized-scores path for short sequences / decode.
+
+    q: (B, Tq, H, dh); k, v: (B, Tk, KV, dh).  GQA via head-group reshape.
+    """
+    B, Tq, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    # grouped (KV, G) einsum: decode reads the cache at its stored KV width —
+    # repeating k/v to H heads here (as blockwise_attention does for sharding)
+    # was measured to 5× the decode memory term by materializing G× the cache.
+    qg = q.reshape(B, Tq, KV, G, dh)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k,
+                        preferred_element_type=jnp.float32) / np.sqrt(dh)
+    valid = positions_k[:, None, :] >= 0 if positions_k.ndim == 2 else (positions_k >= 0)[None, None, :]
+    pq = positions_q[:, :, None] if positions_q.ndim == 2 else positions_q[None, :, None]
+    pk = positions_k[:, None, :] if positions_k.ndim == 2 else positions_k[None, None, :]
+    mask = (pk <= pq) & valid                                  # causal + slot validity
+    if window is not None:
+        mask = mask & (pk > pq - window)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v, preferred_element_type=jnp.float32)
+    return out.reshape(B, Tq, H, dh).astype(q.dtype)
+
+
+def blockwise_attention(q, k, v, *, window: Optional[int] = None,
+                        block_q: int = 512, block_k: int = 512):
+    """Flash-style causal attention in pure jnp (self-attention, same length).
+
+    Never materializes the (T, T) score matrix: scans q-blocks, and for each
+    scans only the k-blocks that can be unmasked — for sliding-window
+    attention that is the diagonal band of ``1 + ceil(window/block_k)``
+    blocks, making compute O(T·window) instead of O(T²).
+    """
+    B, T0, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    # pad T up to a block multiple; padded keys sit at future positions the
+    # causal mask excludes, padded query rows are sliced away at the end.
+    lcm = int(np.lcm(block_q, block_k))
+    T = -(-T0 // lcm) * lcm
+    if T != T0:
+        pad = ((0, 0), (0, T - T0), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    nq, nk = T // block_q, T // block_k
+    scale = 1.0 / np.sqrt(dh)
+
+    if window is not None:
+        n_band = 1 + int(np.ceil((window + block_q - 1) / block_k))
+    else:
+        n_band = None
+
+    # GQA: repeat the (small) k/v blocks up to full heads inside each step so
+    # every einsum keeps a single whole head axis H — shardable H-ways over
+    # the mesh ``model`` axis (a grouped (KV, G) layout caps head-sharding at
+    # KV ways and replicates attention compute G× per device).
+    qr = q.reshape(B, nq, block_q, H, dh)
+    kr = k.reshape(B, nk, block_k, KV, dh)
+    vr = v.reshape(B, nk, block_k, KV, dh)
+
+    def q_block(qi, qb):
+        # qb: (B, block_q, H, dh)
+        qb = _hint(qb, "bqhd")
+        pos_q = qi * block_q + jnp.arange(block_q)
+
+        def kv_step(carry, kj):
+            acc, m, l = carry
+            kb = jax.lax.dynamic_index_in_dim(kr, kj, axis=1, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vr, kj, axis=1, keepdims=False)
+            kb = _hint(jnp.repeat(kb, G, axis=2), "bshd")   # (B, bk, H, dh)
+            vb = _hint(jnp.repeat(vb, G, axis=2), "bshd")
+            pos_k = kj * block_k + jnp.arange(block_k)
+            s = jnp.einsum("bqhd,bshd->bhqs", qb, kb,
+                           preferred_element_type=jnp.float32) * scale
+            s = _hint(s, "bhqs")
+            mask = pos_k[None, :] <= pos_q[:, None]
+            if window is not None:
+                mask = mask & (pos_k[None, :] > pos_q[:, None] - window)
+            s = jnp.where(mask[None, None, :, :], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhqs,bshd->bhqd", p, vb.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        # derive the scan carries from qb (not jnp.zeros) so the SPMD
+        # propagator has a sharding edge into the while-loop state — opaque
+        # zero-init carries otherwise replicate the whole attention loop
+        # across the data axis
+        qT = jnp.swapaxes(qb, 1, 2).astype(jnp.float32)   # (B, H, bq, dh)
+        acc0 = _hint(qT * 0.0, "bhqd")
+        m0 = qT[..., 0] * 0.0 - 1e30
+        l0 = qT[..., 0] * 0.0
+
+        if n_band is None:
+            kjs = jnp.arange(nk)
+            # visit blocks 0..qi_max; fully-masked future blocks contribute 0
+            # but we bound work by scanning only up to the causal frontier.
+            limit = (qi * block_q + block_q - 1) // block_k + 1
+
+            def body(c, kj):
+                c2, _ = jax.lax.cond(
+                    kj < limit, lambda c: kv_step(c, kj), lambda c: (c, None), c)
+                return c2, None
+            (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), kjs)
+        else:
+            hi = (qi * block_q + block_q - 1) // block_k     # diagonal block
+            offs = jnp.arange(n_band)
+
+            def body(c, off):
+                kj = jnp.maximum(hi - off, 0)
+                take = (hi - off) >= 0
+                c2, _ = jax.lax.cond(take, lambda c: kv_step(c, kj),
+                                     lambda c: (c, None), c)
+                return c2, None
+            (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), offs)
+
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out  # (B, H, block_q, dh)
+
+    # Rematerialize each q-block in the backward pass (flash-attention
+    # semantics): without this, training saves every (bq, bk) score block —
+    # O(T^2) activation memory.
+    q_block_r = jax.checkpoint(q_block)
+    outs = jax.lax.map(lambda qi: q_block_r(qi, qr[:, qi]), jnp.arange(nq))
+    # outs: (nq, B, H, block_q, dh) -> (B, T, H, dh)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, T, H, dh)
+    return out[:, :T0].astype(q.dtype)
+
+
+@dataclasses.dataclass
+class KVCache:
+    """Rolling KV cache: ``size`` slots; absolute positions tracked per slot."""
+    k: jax.Array          # (B, size, KV, dh)
+    v: jax.Array          # (B, size, KV, dh)
+    positions: jax.Array  # (size,) int32 absolute position of each slot (-1 empty)
+
+    @staticmethod
+    def empty(batch, size, kv_heads, d_head, dtype):
+        return KVCache(
+            k=jnp.zeros((batch, size, kv_heads, d_head), dtype),
+            v=jnp.zeros((batch, size, kv_heads, d_head), dtype),
+            positions=jnp.full((size,), -1, jnp.int32),
+        )
+
+
+jax.tree_util.register_dataclass(KVCache, data_fields=["k", "v", "positions"],
+                                 meta_fields=[])
+
+
+def build_cache_from_kv(k, v, positions, size: int) -> KVCache:
+    """Rolling cache holding the last ``size`` positions of a prefilled k/v."""
+    B, T, KV, dh = k.shape
+    n = min(T, size)
+    ks, vs = k[:, T - n:], v[:, T - n:]
+    pos_tail = positions[T - n:].astype(jnp.int32)
+    slots = pos_tail % size
+    ck = jnp.zeros((B, size, KV, dh), k.dtype).at[:, slots].set(ks)
+    cv = jnp.zeros((B, size, KV, dh), v.dtype).at[:, slots].set(vs)
+    cpos = jnp.full((size,), -1, jnp.int32).at[slots].set(pos_tail)
+    return KVCache(k=ck, v=cv, positions=cpos)
+
+
+def apply_attention(params, cfg, x, positions, *, cache: Optional[KVCache] = None,
+                    window: Optional[int] = None, block_size: int = 512,
+                    build_cache: Optional[int] = None):
+    """Self-attention forward.
+
+    Prefill/train: ``cache is None`` — full-sequence causal attention
+    (blockwise when T > 2·block_size); with ``build_cache=size`` also returns
+    a rolling KVCache of the last ``size`` positions.
+    Decode: ``cache`` given and T == 1 — appends the token at slot
+    ``positions[0] % size`` (rolling) and attends over the cache.
+    Returns (out, new_cache).
+    """
+    B, T, d = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = matmul(x, params["wq"]).reshape(B, T, H, dh)
+    k = matmul(x, params["wk"]).reshape(B, T, KV, dh)
+    v = matmul(x, params["wv"]).reshape(B, T, KV, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        if T > 2 * block_size:
+            out = blockwise_attention(q, k, v, window=window,
+                                      block_q=block_size, block_k=block_size)
+        else:
+            pos = positions if positions.ndim == 1 else positions[0]
+            out = _plain_attention(q, k, v, pos, pos, window)
+        new_cache = None
+        if build_cache is not None:
+            pos1 = positions if positions.ndim == 1 else positions[0]
+            new_cache = build_cache_from_kv(k, v, pos1, build_cache)
+    else:
+        assert T == 1, "cache path is single-token decode"
+        size = cache.k.shape[1]
+        pos = positions[0] if positions.ndim == 1 else positions[0, 0]
+        slot = (pos % size).astype(jnp.int32)
+        ck = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(cache.positions,
+                                            pos[None].astype(jnp.int32), (slot,))
+        out = _plain_attention(q, ck, cv, pos[None], cpos, window)
+        new_cache = KVCache(k=ck, v=cv, positions=cpos)
+    out = out.reshape(B, T, H * dh)
+    return matmul(out, params["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, f: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(k1, (d, f), dtype),
+        "w_up": _dense_init(k2, (d, f), dtype),
+        "w_down": _dense_init(k3, (f, d), dtype),
+    }
+
+
+def apply_mlp(params, x):
+    g = jax.nn.silu(matmul(x, params["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+    u = matmul(x, params["w_up"])
+    return matmul(g * u, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, dtype) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x):
+    return jnp.matmul(x, params["table"].T, preferred_element_type=jnp.float32)

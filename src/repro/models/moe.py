@@ -1,0 +1,112 @@
+"""Mixture-of-Experts FFN (grok-1: 8e top-2; arctic: 128e top-2 + dense residual).
+
+Capacity-based dispatch (Switch-style) implemented with scatter/gather rather
+than one-hot dispatch tensors: the (tokens × experts × capacity) einsum
+formulation costs O(N·E·C) memory — infeasible at arctic scale (1M tokens ×
+128 experts) — whereas scatter-add dispatch + gather combine is O(E·C·d + N·k·d).
+Compute is O(top_k · T · d · f): MoE FLOPs in the roofline are *active* FLOPs.
+Expert weights carry a leading E axis sharded over the mesh ``model`` axis
+(expert parallelism); dispatch/combine lower to all-to-all / collective
+scatter-gather under pjit.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init, matmul
+
+
+def init_moe(key, cfg) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (d, E), cfg.pdtype, scale=0.02),
+        "w_gate": _dense_init(ks[1], (E, d, f), cfg.pdtype),
+        "w_up": _dense_init(ks[2], (E, d, f), cfg.pdtype),
+        "w_down": _dense_init(ks[3], (E, f, d), cfg.pdtype),
+    }
+    if cfg.dense_residual_ff:
+        from repro.models.layers import init_mlp
+        p["dense_residual"] = init_mlp(ks[4], d, cfg.dense_residual_ff, cfg.pdtype)
+    return p
+
+
+def _top_k_gating(logits: jax.Array, top_k: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (gates (N, k) renormalized, expert_idx (N, k), aux load-balance loss)."""
+    N, E = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)
+    gates = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    # Switch/GShard load-balance loss: E · Σ_e fraction_e · mean_prob_e
+    me = probs.mean(axis=0)                                   # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_idx.reshape(-1)].add(
+        1.0 / (N * top_k))
+    aux = E * jnp.sum(me * ce)
+    return gates, expert_idx, aux
+
+
+def apply_moe(params, cfg, x, *, capacity_factor: float = None):
+    """x: (B, T, d) -> (out (B, T, d), aux_loss scalar).
+
+    ``cfg.moe_groups > 1`` splits tokens into G independent dispatch groups
+    (GShard): gating/position bookkeeping is local to a group (aligned with
+    the mesh data shards), and the grouped (G, E, C, d) expert buffers give
+    the partitioner a clean G↔E all-to-all instead of a global scatter
+    across the data axis.
+    """
+    B, T, d = x.shape
+    G = max(1, cfg.moe_groups)
+    N = B * T
+    if G > 1 and N % G == 0 and N // G >= cfg.n_experts:
+        xg = x.reshape(G, N // G, d)
+        outs, auxs = jax.vmap(
+            lambda xt: _moe_tokens(params, cfg, xt, capacity_factor))(xg)
+        return outs.reshape(B, T, d), jnp.mean(auxs)
+    out, aux = _moe_tokens(params, cfg, x.reshape(N, d), capacity_factor)
+    return out.reshape(B, T, d), aux
+
+
+def _moe_tokens(params, cfg, xt, capacity_factor=None):
+    """Dispatch/compute/combine for a flat (N, d) token group."""
+    N, d = xt.shape
+    E, k = cfg.n_experts, cfg.top_k
+    logits = matmul(xt, params["router"])                     # (N, E)
+    gates, expert_idx, aux = _top_k_gating(logits, k)
+    cf = cfg.moe_capacity_factor if capacity_factor is None else capacity_factor
+    capacity = max(4, int(cf * k * N / E))
+
+    # position of each (token, choice) within its expert's capacity buffer,
+    # via a cumulative count of earlier routings to the same expert.
+    onehot = jax.nn.one_hot(expert_idx.reshape(N * k), E, dtype=jnp.int32)
+    pos_flat = (jnp.cumsum(onehot, axis=0) - onehot)
+    pos = jnp.take_along_axis(
+        pos_flat, expert_idx.reshape(N * k, 1), axis=1).reshape(N, k)
+    keep = pos < capacity
+    gates = gates * keep.astype(gates.dtype)
+    safe_pos = jnp.where(keep, pos, capacity - 1)
+
+    # dispatch: scatter-add tokens into (E, C, d) expert buffers
+    vals = xt[:, None, :] * keep[..., None].astype(xt.dtype)  # (N, k, d)
+    expert_in = jnp.zeros((E, capacity, d), xt.dtype).at[
+        expert_idx, safe_pos].add(vals, mode="drop")
+
+    # expert FFN (SwiGLU) batched over E
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, params["w_gate"],
+                               preferred_element_type=jnp.float32))
+    u = jnp.einsum("ecd,edf->ecf", expert_in, params["w_up"],
+                   preferred_element_type=jnp.float32)
+    h = (g * u).astype(xt.dtype)
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["w_down"],
+                            preferred_element_type=jnp.float32).astype(xt.dtype)
+
+    # combine: gather each token's expert outputs back, weight by gates
+    gathered = expert_out[expert_idx, safe_pos]               # (N, k, d)
+    out = jnp.sum(gathered * gates[..., None].astype(xt.dtype), axis=1)
+
+    if cfg.dense_residual_ff:
+        from repro.models.layers import apply_mlp
+        out = out + apply_mlp(params["dense_residual"], xt[None])[0]
+    return out, aux

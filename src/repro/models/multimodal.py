@@ -1,0 +1,39 @@
+"""Stub modality frontends (the brief's one allowed stub).
+
+``[audio]`` / ``[vlm]`` architectures specify the transformer backbone only;
+the mel-spectrogram/EnCodec conv stack and the ViT/SigLIP encoder + projector
+are *not* implemented.  These helpers produce the precomputed frame/patch
+embeddings of the right shape — random for smoke tests, ShapeDtypeStruct for
+the dry-run (see launch/shapes.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def prefix_shape(cfg: ModelConfig, batch: int):
+    """(B, P, D) shape of the stub frontend's output embeddings."""
+    assert cfg.frontend in ("audio", "vision"), cfg.frontend
+    return (batch, cfg.n_prefix_tokens, cfg.d_model)
+
+
+def make_stub_prefix(key, cfg: ModelConfig, batch: int, dtype=None):
+    """Random placeholder embeddings standing in for the frozen frontend."""
+    shape = prefix_shape(cfg, batch)
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype or cfg.cdtype)
+
+
+def anyres_tile_count(image_hw, tile: int = 336, patches_per_tile: int = 576,
+                      max_tiles: int = 4) -> int:
+    """LLaVA-NeXT anyres tiling: #patches for an image (base tile + grid tiles).
+
+    Used by examples/serving to size the prefix for a given image resolution;
+    the assigned config pins the worst case (4 grid tiles + base = 2880).
+    """
+    h, w = image_hw
+    gh, gw = -(-h // tile), -(-w // tile)
+    n_tiles = min(gh * gw, max_tiles) + 1      # +1 global base tile
+    return n_tiles * patches_per_tile

@@ -1,0 +1,146 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+Real-Gated Linear Recurrent Unit:
+
+    r_t = σ(W_a x_t + b_a)            recurrence gate
+    i_t = σ(W_x x_t + b_x)            input gate
+    a_t = a^{c·r_t},  a = σ(Λ)        per-channel data-gated decay (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+The recurrence is a diagonal first-order linear scan → evaluated with
+``jax.lax.associative_scan`` (log-depth, TPU-friendly); the Pallas
+``linear_scan`` kernel is the blocked on-chip version of the same operator.
+The block wraps the RG-LRU with in/out projections, a short causal conv, and
+a GeLU gate branch, as in Griffin.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init, matmul
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array          # (B, W) recurrent state
+    conv: jax.Array       # (B, conv_width-1, W) trailing conv inputs
+
+    @staticmethod
+    def zeros(batch: int, cfg, dtype):
+        w = cfg.rnn_width
+        return RGLRUState(
+            h=jnp.zeros((batch, w), jnp.float32),
+            conv=jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+        )
+
+
+def init_rglru_block(key, cfg) -> dict:
+    d, w = cfg.d_model, cfg.rnn_width
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": _dense_init(ks[0], (d, w), cfg.pdtype),
+        "w_gate_branch": _dense_init(ks[1], (d, w), cfg.pdtype),
+        "conv_kernel": (jax.random.normal(ks[2], (cfg.conv_width, w)) * 0.1
+                        ).astype(cfg.pdtype),
+        "conv_bias": jnp.zeros((w,), cfg.pdtype),
+        "w_a": _dense_init(ks[3], (w, w), cfg.pdtype, scale=0.01),
+        "b_a": jnp.zeros((w,), cfg.pdtype),
+        "w_x": _dense_init(ks[4], (w, w), cfg.pdtype, scale=0.01),
+        "b_x": jnp.zeros((w,), cfg.pdtype),
+        "lam": jnp.full((w,), 2.0, cfg.pdtype),  # a = σ(Λ) ≈ 0.88 init
+        "w_out": _dense_init(ks[5], (w, d), cfg.pdtype),
+    }
+
+
+def _causal_conv(x, kernel, bias, carry: Optional[jax.Array] = None):
+    """Depthwise causal conv over T.  x: (B, T, W); kernel: (cw, W)."""
+    cw = kernel.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    out = sum(
+        xp[:, i:i + x.shape[1]] * kernel[i][None, None, :]
+        for i in range(cw)
+    )
+    new_carry = xp[:, -(cw - 1):] if cw > 1 else carry
+    return out + bias[None, None, :], new_carry
+
+
+def rglru_scan(a, x_in, chunk: int = 256):
+    """Diagonal linear recurrence  h_t = a_t·h_{t-1} + x_t,  h_0 = 0.
+
+    Chunked: sequential ``lax.scan`` over T/chunk chunks carrying only the
+    boundary state, log-depth ``associative_scan`` *within* each
+    rematerialized chunk.  A single full-length associative scan saves
+    O(T·log T) intermediates for backward — measured 132 GiB/device peak on
+    the recurrentgemma train_4k dry-run; chunking bounds the live set to one
+    chunk's tree (the same blocking the Pallas ``linear_scan`` kernel uses).
+    a, x_in: (B, T, W) float32.
+    """
+    B, T, W = a.shape
+    if T <= chunk or T % chunk:
+        return _assoc_scan(a, x_in)
+
+    n = T // chunk
+    ar = a.reshape(B, n, chunk, W)
+    xr = x_in.reshape(B, n, chunk, W)
+
+    @jax.checkpoint
+    def one_chunk(h0, ax):
+        ac, xc = ax                              # (B, chunk, W)
+        h = _assoc_scan(ac, xc)
+        # fold the carried boundary state into every step of the chunk
+        cum = jnp.exp(jnp.cumsum(jnp.log(jnp.clip(ac, 1e-30, None)), axis=1))
+        h = h + cum * h0[:, None, :]
+        return h[:, -1], h
+
+    _, hs = jax.lax.scan(one_chunk, jnp.zeros((B, W), a.dtype),
+                         (jnp.swapaxes(ar, 0, 1), jnp.swapaxes(xr, 0, 1)))
+    return jnp.swapaxes(hs, 0, 1).reshape(B, T, W)
+
+
+def _assoc_scan(a, x_in):
+    def combine(left, right):
+        a1, x1 = left
+        a2, x2 = right
+        return a1 * a2, a2 * x1 + x2
+
+    aT, xT = jnp.swapaxes(a, 0, 1), jnp.swapaxes(x_in, 0, 1)
+    _, h = jax.lax.associative_scan(combine, (aT, xT), axis=0)
+    return jnp.swapaxes(h, 0, 1)
+
+
+def apply_rglru_block(params, cfg, x, state: Optional[RGLRUState] = None):
+    """x: (B, T, D) -> (out, new_state)."""
+    B, T, D = x.shape
+    gate = jax.nn.gelu(matmul(x, params["w_gate_branch"]).astype(jnp.float32))
+    u = matmul(x, params["w_in"])
+    u, conv_carry = _causal_conv(
+        u, params["conv_kernel"], params["conv_bias"],
+        state.conv if state is not None else None)
+    u32 = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(matmul(u, params["w_a"]).astype(jnp.float32)
+                       + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(matmul(u, params["w_x"]).astype(jnp.float32)
+                       + params["b_x"].astype(jnp.float32))
+    log_a = _C * r * jax.nn.log_sigmoid(params["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)                               # (B, T, W) in (0, 1)
+    gated_in = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12, 1.0)) * (i * u32)
+    w = params["w_in"].shape[1]
+    h0 = state.h if state is not None else jnp.zeros((B, w), jnp.float32)
+    if T == 1 and state is not None:
+        h = (a[:, 0] * h0 + gated_in[:, 0])[:, None]
+    else:
+        h = rglru_scan(a, gated_in)
+        if state is not None:  # prefill continuing from a state
+            # fold h0 into every step: h_t += (prod_{s<=t} a_s)·h0
+            cum = jnp.exp(jnp.cumsum(log_a, axis=1))
+            h = h + cum * h0[:, None, :]
+    y = (h * gate).astype(x.dtype)
+    out = matmul(y, params["w_out"])
+    new_state = RGLRUState(h=h[:, -1], conv=conv_carry)
+    return out, new_state

@@ -1,0 +1,199 @@
+"""RWKV6 ("Finch") blocks — attention-free with data-dependent decay [arXiv:2404.05892].
+
+Per head (dims K = V = head size), with receptance r, key k, value v, decay w
+and bonus u, the recurrence is
+
+    y_t = r_tᵀ (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+The decay w_t = exp(-exp(w0 + lora(x_t))) is *data-dependent* — Finch's
+headline feature.  Training/prefill uses a chunked parallel form (intra-chunk
+matmuls on the MXU + inter-chunk state carry — the same tiling realized by the
+Pallas ``linear_scan`` kernel), decode is the O(1) single-step update.  The
+recurrent state is an activation, never gossiped (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _dense_init, init_rmsnorm, matmul, rmsnorm
+
+
+class RWKVState(NamedTuple):
+    """Decode-time state: last token embedding shifts + per-head matrix state."""
+    shift_tm: jax.Array   # (B, D) previous token's input to time-mix
+    shift_cm: jax.Array   # (B, D) previous token's input to channel-mix
+    S: jax.Array          # (B, H, K, V) matrix state
+
+    @staticmethod
+    def zeros(batch: int, cfg, dtype):
+        H = cfg.d_model // cfg.rwkv_head_dim
+        K = cfg.rwkv_head_dim
+        return RWKVState(
+            shift_tm=jnp.zeros((batch, cfg.d_model), dtype),
+            shift_cm=jnp.zeros((batch, cfg.d_model), dtype),
+            S=jnp.zeros((batch, H, K, K), jnp.float32),
+        )
+
+
+def init_time_mix(key, cfg) -> dict:
+    d = cfg.d_model
+    K = cfg.rwkv_head_dim
+    H = d // K
+    lora = max(32, d // 32)
+    ks = jax.random.split(key, 10)
+    return {
+        "mu_r": jnp.full((d,), 0.5, cfg.pdtype),
+        "mu_k": jnp.full((d,), 0.5, cfg.pdtype),
+        "mu_v": jnp.full((d,), 0.5, cfg.pdtype),
+        "mu_g": jnp.full((d,), 0.5, cfg.pdtype),
+        "mu_w": jnp.full((d,), 0.5, cfg.pdtype),
+        "w_r": _dense_init(ks[0], (d, d), cfg.pdtype),
+        "w_k": _dense_init(ks[1], (d, d), cfg.pdtype),
+        "w_v": _dense_init(ks[2], (d, d), cfg.pdtype),
+        "w_g": _dense_init(ks[3], (d, d), cfg.pdtype),
+        "w_o": _dense_init(ks[4], (d, d), cfg.pdtype),
+        # data-dependent decay: w_t = exp(-exp(w0 + B·tanh(A·x)))
+        "decay_w0": jnp.full((d,), -2.0, cfg.pdtype),
+        "decay_A": _dense_init(ks[5], (d, lora), cfg.pdtype, scale=0.01),
+        "decay_B": _dense_init(ks[6], (lora, d), cfg.pdtype, scale=0.01),
+        "bonus_u": (jax.random.normal(ks[7], (H, K)) * 0.05).astype(cfg.pdtype),
+        "out_norm": init_rmsnorm(d, cfg.pdtype),
+    }
+
+
+def init_channel_mix(key, cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, cfg.pdtype),
+        "mu_r": jnp.full((d,), 0.5, cfg.pdtype),
+        "w_k": _dense_init(ks[0], (d, f), cfg.pdtype),
+        "w_v": _dense_init(ks[1], (f, d), cfg.pdtype),
+        "w_r": _dense_init(ks[2], (d, d), cfg.pdtype),
+    }
+
+
+def _token_shift(x, x_prev_last: Optional[jax.Array] = None):
+    """x_{t-1} per position; position 0 sees ``x_prev_last`` (decode carry) or 0."""
+    prev = jnp.roll(x, 1, axis=1)
+    first = jnp.zeros_like(x[:, :1]) if x_prev_last is None else x_prev_last[:, None]
+    return prev.at[:, :1].set(first)
+
+
+def _lerp(mu, x, x_prev):
+    return x + (x_prev - x) * mu.astype(x.dtype)
+
+
+def chunked_rwkv(r, k, v, w, u, S0, chunk: int = 64):
+    """Chunked parallel evaluation of the RWKV6 recurrence.
+
+    r/k/w: (B, H, T, K); v: (B, H, T, V); u: (H, K); S0: (B, H, K, V).
+    Returns (y (B, H, T, V), S_T).  All math in float32.
+    """
+    B, H, T, K = r.shape
+    V = v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    n = T // chunk
+    f32 = jnp.float32
+    r, k, v, w = (a.astype(f32) for a in (r, k, v, w))
+    rc = r.reshape(B, H, n, chunk, K)
+    kc = k.reshape(B, H, n, chunk, K)
+    vc = v.reshape(B, H, n, chunk, V)
+    wc = w.reshape(B, H, n, chunk, K)
+    logw = jnp.log(jnp.clip(wc, 1e-6, 1.0))
+    logA = jnp.cumsum(logw, axis=3)                  # inclusive cumulative log-decay
+    A = jnp.exp(logA)                                # prod_{s<=t} w_s
+    Aprev = jnp.exp(logA - logw)                     # prod_{s<t}  w_s
+    kscaled = kc / jnp.clip(A, 1e-20, None)          # k_s / A_s
+
+    # strictly-lower-triangular intra-chunk interaction
+    tri = jnp.tril(jnp.ones((chunk, chunk), f32), k=-1)
+
+    def step(S, ci):
+        rcb, kcb, vcb, Ab, Apb, ksb = (
+            rc[:, :, ci], kc[:, :, ci], vc[:, :, ci], A[:, :, ci],
+            Aprev[:, :, ci], kscaled[:, :, ci])
+        rA = rcb * Apb                               # (B,H,c,K)
+        # cross-chunk contribution: (r_t ⊙ A_{t-1})ᵀ S0
+        y_cross = jnp.einsum("bhtk,bhkv->bhtv", rA, S)
+        # intra-chunk: Σ_{s<t} ((r_t⊙A_{t-1})·(k_s/A_s)) v_s
+        qk = jnp.einsum("bhtk,bhsk->bhts", rA, ksb) * tri[None, None]
+        y_intra = jnp.einsum("bhts,bhsv->bhtv", qk, vcb)
+        # current-token bonus: u·(r_t·k_t) v_t
+        bonus = jnp.einsum("bhtk,bhtk->bht", rcb * u[None, :, None, :], kcb)
+        y_self = bonus[..., None] * vcb
+        y = y_cross + y_intra + y_self
+        # carry: S' = diag(A_c) S + Σ_s diag(A_c/A_s) k_s v_sᵀ
+        Ac = Ab[:, :, -1]                            # (B,H,K)
+        kAc = ksb * Ac[:, :, None, :]
+        S_new = Ac[..., None] * S + jnp.einsum("bhsk,bhsv->bhkv", kAc, vcb)
+        return S_new, y
+
+    S_T, ys = jax.lax.scan(step, S0.astype(f32), jnp.arange(n))
+    y = jnp.moveaxis(ys, 0, 2).reshape(B, H, T, V)
+    return y, S_T
+
+
+def rwkv_step(r, k, v, w, u, S):
+    """Single decode step: r/k/w (B, H, K); v (B, H, V); S (B, H, K, V)."""
+    f32 = jnp.float32
+    r, k, v, w = (a.astype(f32) for a in (r, k, v, w))
+    kv = k[..., :, None] * v[..., None, :]           # (B,H,K,V)
+    y = jnp.einsum("bhk,bhkv->bhv", r, S + u[None, :, :, None] * kv)
+    S_new = w[..., None] * S + kv
+    return y, S_new
+
+
+def _decay(params, xw):
+    dd = jnp.tanh(matmul(xw, params["decay_A"]))
+    dd = matmul(dd, params["decay_B"])
+    return jnp.exp(-jnp.exp(
+        params["decay_w0"].astype(jnp.float32) + dd.astype(jnp.float32)))
+
+
+def apply_time_mix(params, cfg, x, state: Optional[RWKVState] = None, chunk: int = 64):
+    """Time-mix over a sequence (training/prefill) or one step (decode).
+
+    x: (B, T, D).  Returns (out, new_S, last_x) where new_S/last_x feed decode.
+    """
+    B, T, D = x.shape
+    K = cfg.rwkv_head_dim
+    H = D // K
+    prev = _token_shift(x, state.shift_tm if state is not None else None)
+    xr = _lerp(params["mu_r"], x, prev)
+    xk = _lerp(params["mu_k"], x, prev)
+    xv = _lerp(params["mu_v"], x, prev)
+    xg = _lerp(params["mu_g"], x, prev)
+    xw = _lerp(params["mu_w"], x, prev)
+    r = matmul(xr, params["w_r"]).reshape(B, T, H, K).transpose(0, 2, 1, 3)
+    k = matmul(xk, params["w_k"]).reshape(B, T, H, K).transpose(0, 2, 1, 3)
+    v = matmul(xv, params["w_v"]).reshape(B, T, H, K).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(matmul(xg, params["w_g"]).astype(jnp.float32)).astype(x.dtype)
+    w = _decay(params, xw).reshape(B, T, H, K).transpose(0, 2, 1, 3)
+    u = params["bonus_u"].astype(jnp.float32)
+    S0 = (state.S if state is not None
+          else jnp.zeros((B, H, K, K), jnp.float32))
+    if T == 1:
+        y, S_new = rwkv_step(r[:, :, 0], k[:, :, 0], v[:, :, 0], w[:, :, 0], u, S0)
+        y = y[:, :, None]                            # (B,H,1,V)
+    else:
+        c = chunk if T % chunk == 0 else (T if T < chunk else 1)
+        y, S_new = chunked_rwkv(r, k, v, w, u, S0, chunk=c)
+    y = y.transpose(0, 2, 1, 3).reshape(B, T, D).astype(x.dtype)
+    y = rmsnorm(params["out_norm"], y, cfg.norm_eps) * g
+    out = matmul(y, params["w_o"])
+    return out, S_new, x[:, -1]
+
+
+def apply_channel_mix(params, x, state_prev: Optional[jax.Array] = None):
+    prev = _token_shift(x, state_prev)
+    xk = _lerp(params["mu_k"], x, prev)
+    xr = _lerp(params["mu_r"], x, prev)
+    kk = matmul(xk, params["w_k"])
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    rr = jax.nn.sigmoid(matmul(xr, params["w_r"]).astype(jnp.float32)).astype(x.dtype)
+    return rr * matmul(kk, params["w_v"]), x[:, -1]

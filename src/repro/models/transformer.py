@@ -1,0 +1,360 @@
+"""Composable decoder model covering all six assigned families.
+
+One functional model with per-family block wiring:
+
+  dense / audio / vlm : [RMSNorm → GQA-attn → +] [RMSNorm → SwiGLU → +]   × L (scan)
+  moe                 : same with MoE FFN (+ optional dense residual)      × L (scan)
+  ssm (rwkv6)         : [LN → time-mix → +] [LN → channel-mix → +]         × L (scan)
+  hybrid (griffin)    : pattern ("rec","rec","attn") — RG-LRU / local-attn   (unrolled)
+
+Homogeneous stacks scan over layer-stacked parameters (compact HLO for the
+95-layer dry-runs); the 26-layer hybrid pattern is unrolled.  ``audio`` and
+``vlm`` consume stub-frontend prefix embeddings prepended to the token stream
+(the brief's one allowed stub).  Decode state is a per-layer pytree: KVCache
+(attention), RWKVState (ssm), or (RGLRUState | KVCache) for hybrid.
+
+Three entry points share one layer-runner:
+  * ``forward``    — train/eval full-sequence logits (+ chunked-CE ``lm_loss``)
+  * ``prefill``    — full sequence, returns last-token logits + decode state
+  * ``decode_step``— one token against the decode state (serve_step)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import rwkv as RW
+from repro.models.layers import KVCache
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply
+# ---------------------------------------------------------------------------
+
+def _init_attn_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": L.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "attn": L.init_attention(k1, cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model, cfg.pdtype),
+    }
+    if cfg.family == "moe":
+        p["ffn"] = MOE.init_moe(k2, cfg)
+    else:
+        p["ffn"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.pdtype)
+    return p
+
+
+def _apply_attn_layer(p, cfg, x, positions, state, window, build_cache=None):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    attn_out, new_state = L.apply_attention(
+        p["attn"], cfg, h, positions, cache=state, window=window,
+        build_cache=build_cache)
+    x = x + attn_out
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        ffn_out, aux = MOE.apply_moe(p["ffn"], cfg, h)
+    else:
+        ffn_out, aux = L.apply_mlp(p["ffn"], h), jnp.float32(0)
+    return x + ffn_out, new_state, aux
+
+
+def _init_rwkv_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "time_mix": RW.init_time_mix(k1, cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "channel_mix": RW.init_channel_mix(k2, cfg),
+    }
+
+
+def _apply_rwkv_layer(p, cfg, x, state: Optional[RW.RWKVState]):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    tm_out, S_new, last_tm = RW.apply_time_mix(p["time_mix"], cfg, h, state)
+    x = x + tm_out
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    cm_out, last_cm = RW.apply_channel_mix(
+        p["channel_mix"], h, state.shift_cm if state is not None else None)
+    x = x + cm_out
+    new_state = RW.RWKVState(shift_tm=last_tm, shift_cm=last_cm, S=S_new)
+    return x, new_state, jnp.float32(0)
+
+
+def _init_rec_layer(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "rec": RG.init_rglru_block(k1, cfg),
+        "ln2": L.init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "ffn": L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.pdtype),
+    }
+
+
+def _apply_rec_layer(p, cfg, x, state: Optional[RG.RGLRUState]):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    rec_out, new_state = RG.apply_rglru_block(p["rec"], cfg, h, state)
+    x = x + rec_out
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + L.apply_mlp(p["ffn"], h)
+    return x, new_state, jnp.float32(0)
+
+
+_INIT = {"attn": _init_attn_layer, "rwkv": _init_rwkv_layer, "rec": _init_rec_layer}
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def block_pattern(cfg: ModelConfig) -> Tuple[str, ...]:
+    if cfg.family == "ssm":
+        return tuple(["rwkv"] * cfg.n_layers)
+    return cfg._pattern_expanded()
+
+
+def _stacked(pattern) -> bool:
+    return len(set(pattern)) == 1
+
+
+def init_model(key, cfg: ModelConfig) -> dict:
+    ke, kl, kh = jax.random.split(key, 3)
+    params: dict = {"embed": L.init_embedding(ke, cfg.vocab_size, cfg.d_model,
+                                              cfg.pdtype)}
+    pattern = block_pattern(cfg)
+    keys = jax.random.split(kl, cfg.n_layers)
+    if _stacked(pattern):
+        init_one = _INIT[pattern[0]]
+        params["layers"] = jax.vmap(lambda k: init_one(k, cfg))(keys)
+    else:
+        params["layers"] = tuple(
+            _INIT[pt](k, cfg) for pt, k in zip(pattern, keys))
+    params["final_norm"] = L.init_rmsnorm(cfg.d_model, cfg.pdtype)
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": L._dense_init(kh, (cfg.d_model, cfg.vocab_size),
+                                             cfg.pdtype, scale=0.02)}
+    return params
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Exact parameter count from abstract init (no allocation)."""
+    import numpy as np
+    shapes = jax.eval_shape(lambda k: init_model(k, cfg), jax.random.PRNGKey(0))
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(shapes)))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Per-token active parameters (MoE counts only top-k experts)."""
+    total = param_count(cfg)
+    if cfg.family != "moe":
+        return total
+    per_expert = 3 * cfg.d_model * cfg.d_ff
+    inactive = cfg.n_layers * (cfg.n_experts - cfg.top_k) * per_expert
+    return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# Unified layer runner
+# ---------------------------------------------------------------------------
+
+def _run_layers(params, cfg: ModelConfig, x, positions, *, states=None,
+                build_cache: Optional[int] = None, remat: bool = False):
+    """Run all blocks.  Returns (x, aux, new_states_or_None).
+
+    states given           → decode / continued prefill (per-layer state in/out)
+    build_cache = size     → prefill: construct decode states
+    neither                → plain training forward
+    """
+    window = cfg.attn_window
+    pattern = block_pattern(cfg)
+    collect = (states is not None) or (build_cache is not None)
+
+    def run_one(kind, lp, x, st):
+        if kind == "attn":
+            bc = build_cache if states is None else None
+            if bc is not None and window:
+                bc = min(bc, window)
+            return _apply_attn_layer(lp, cfg, x, positions, st, window, bc)
+        if kind == "rwkv":
+            return _apply_rwkv_layer(lp, cfg, x, st)
+        return _apply_rec_layer(lp, cfg, x, st)
+
+    if _stacked(pattern):
+        kind = pattern[0]
+        if states is None:
+            def body(x, lp):
+                x, st2, aux = run_one(kind, lp, x, None)
+                return x, (aux, st2) if collect else aux
+            if remat:
+                body = jax.checkpoint(body)
+            x, ys = jax.lax.scan(body, x, params["layers"])
+            auxs, new_states = ys if collect else (ys, None)
+        else:
+            def body(x, xs):
+                lp, st = xs
+                x, st2, aux = run_one(kind, lp, x, st)
+                return x, (aux, st2)
+            if remat:
+                body = jax.checkpoint(body)
+            x, (auxs, new_states) = jax.lax.scan(body, x, (params["layers"], states))
+        return x, jnp.sum(auxs), new_states
+
+    # unrolled hybrid pattern
+    aux = jnp.float32(0)
+    new_states = []
+    for i, (pt, lp) in enumerate(zip(pattern, params["layers"])):
+        st = states[i] if states is not None else None
+        fn = (lambda x, st, pt=pt, lp=lp: run_one(pt, lp, x, st))
+        if remat:
+            fn = jax.checkpoint(fn)
+        x, st2, a = fn(x, st)
+        aux = aux + a
+        new_states.append(st2)
+    return x, aux, (tuple(new_states) if collect else None)
+
+
+def _logits(params, cfg, x):
+    if cfg.tie_embeddings:
+        return L.unembed(params["embed"], x)
+    return jnp.matmul(x, params["head"]["w"], preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, tokens, prefix_embeds=None,
+            remat: bool = False):
+    """tokens: (B, T) int32; prefix_embeds: (B, P, D) or None.
+
+    Returns (logits (B, T_text, V), aux_loss) — logits cover text positions
+    only (prefix positions are conditioning, not predicted).
+    """
+    x = L.embed(params["embed"], tokens).astype(cfg.cdtype)
+    n_prefix = 0
+    if prefix_embeds is not None:
+        n_prefix = prefix_embeds.shape[1]
+        x = jnp.concatenate([prefix_embeds.astype(cfg.cdtype), x], axis=1)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, aux, _ = _run_layers(params, cfg, x, positions, remat=remat)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    return _logits(params, cfg, x), aux
+
+
+def lm_loss(params, cfg: ModelConfig, batch, remat: bool = False,
+            aux_weight: float = 0.01, logit_chunk: Optional[int] = None):
+    """Next-token cross-entropy.  batch: {tokens (B,T), [prefix (B,P,D)]}.
+
+    ``logit_chunk`` computes the unembed + CE in rematerialized sequence
+    chunks so the (B, T, vocab) logits tensor is never alive at once — the
+    standard memory fix for 100k+ vocabularies at 4k sequence length.
+    """
+    tokens = batch["tokens"]
+    x = L.embed(params["embed"], tokens).astype(cfg.cdtype)
+    n_prefix = 0
+    if batch.get("prefix") is not None:
+        n_prefix = batch["prefix"].shape[1]
+        x = jnp.concatenate([batch["prefix"].astype(cfg.cdtype), x], axis=1)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, aux, _ = _run_layers(params, cfg, x, positions, remat=remat)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    # shift: predict token t+1 from hidden t
+    x = x[:, :-1]
+    targets = tokens[:, 1:]
+
+    def ce(xc, tc):
+        logits = L._hint(_logits(params, cfg, xc), "bqv")  # chunk dim shardable
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, tc[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        return nll.sum()
+
+    Tm1 = x.shape[1]
+    if logit_chunk and Tm1 > logit_chunk:
+        # full chunks via a rematerialized scan + one remainder chunk, so the
+        # (B, T, vocab) logits tensor never exists whole (T−1 is never a
+        # multiple of the chunk — the shift costs one token)
+        nc, rem = divmod(Tm1, logit_chunk)
+        ce_r = jax.checkpoint(ce)
+        xr = x[:, :nc * logit_chunk].reshape(
+            x.shape[0], nc, logit_chunk, x.shape[-1])
+        tr = targets[:, :nc * logit_chunk].reshape(
+            targets.shape[0], nc, logit_chunk)
+
+        def chunk_body(tot, i):
+            return tot + ce_r(xr[:, i], tr[:, i]), None
+        total, _ = jax.lax.scan(chunk_body, jnp.float32(0), jnp.arange(nc))
+        if rem:
+            total = total + ce_r(x[:, nc * logit_chunk:],
+                                 targets[:, nc * logit_chunk:])
+    else:
+        total = ce(x, targets)
+    n_tok = targets.shape[0] * targets.shape[1]
+    return total / n_tok + aux_weight * aux
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache_len: int,
+            prefix_embeds=None):
+    """Full-sequence prefill.  Returns (last-token logits (B, V), decode state)."""
+    x = L.embed(params["embed"], tokens).astype(cfg.cdtype)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.cdtype), x], axis=1)
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, _, states = _run_layers(params, cfg, x, positions, build_cache=cache_len)
+    x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return _logits(params, cfg, x)[:, 0], states
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, cache_len: int,
+                      filled: bool = False):
+    """Per-layer decode state sized for a KV history of ``cache_len``.
+
+    For sliding-window archs the attention cache is ``min(window, cache_len)``
+    slots (rolling) — the memory saving that makes long_500k feasible.
+    ``filled`` marks slots as holding positions [cache_len − size, cache_len).
+    """
+    window = cfg.attn_window
+    attn_len = min(window, cache_len) if window else cache_len
+    dt = cfg.cdtype
+
+    def attn_state():
+        c = KVCache.empty(batch, attn_len, cfg.n_kv_heads, cfg.d_head, dt)
+        if filled:
+            pos = jnp.arange(cache_len - attn_len, cache_len, dtype=jnp.int32)
+            slots = pos % attn_len
+            c = KVCache(k=c.k, v=c.v,
+                        positions=jnp.zeros((attn_len,), jnp.int32
+                                            ).at[slots].set(pos))
+        return c
+
+    pattern = block_pattern(cfg)
+    if cfg.family == "ssm":
+        st = RW.RWKVState.zeros(batch, cfg, dt)
+        return jax.tree.map(lambda x: jnp.stack([x] * cfg.n_layers), st)
+    if _stacked(pattern):
+        sts = [attn_state() for _ in range(cfg.n_layers)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *sts)
+    return tuple(attn_state() if pt == "attn" else RG.RGLRUState.zeros(batch, cfg, dt)
+                 for pt in pattern)
+
+
+def decode_step(params, cfg: ModelConfig, token, state, pos):
+    """One decode step (serve_step).  token: (B,); pos: () absolute position.
+
+    Returns (logits (B, V), new_state).
+    """
+    x = L.embed(params["embed"], token[:, None]).astype(cfg.cdtype)
+    positions = pos[None].astype(jnp.int32)
+    x, _, new_state = _run_layers(params, cfg, x, positions, states=state)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x)[:, 0], new_state

@@ -1,0 +1,2 @@
+from repro.optim import schedules
+from repro.optim.optimizers import Optimizer, adamw, apply_updates, make, momentum, sgd

@@ -1,0 +1,87 @@
+"""Optimizers as pure (init, update) pairs over parameter pytrees.
+
+DSGD-family algorithms use plain SGD at each worker (eq. 4) — momentum and
+AdamW are provided for the centralized training drivers and beyond-paper
+experiments (decentralized Adam keeps per-worker moments; only parameters are
+gossiped, matching how Adam composes with consensus methods in practice).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable    # params -> opt_state
+    update: Callable  # (grads, opt_state, params, eta) -> (updates, opt_state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, eta):
+        return jax.tree.map(lambda g: -eta * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum(beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, m, params, eta):
+        m = jax.tree.map(lambda mi, g: beta * mi + g, m, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda mi, g: -eta * (beta * mi + g), m, grads)
+        else:
+            upd = jax.tree.map(lambda mi: -eta * mi, m)
+        return upd, m
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: object
+    nu: object
+    count: jax.Array
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamState(mu=jax.tree.map(z, params),
+                         nu=jax.tree.map(z, params),
+                         count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, eta):
+        c = state.count + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        mh = jax.tree.map(lambda m: m / (1 - b1 ** c.astype(jnp.float32)), mu)
+        vh = jax.tree.map(lambda v: v / (1 - b2 ** c.astype(jnp.float32)), nu)
+        upd = jax.tree.map(
+            lambda m, v, p: -eta * (m / (jnp.sqrt(v) + eps)
+                                    + weight_decay * p.astype(jnp.float32)),
+            mh, vh, params)
+        return upd, AdamState(mu=mu, nu=nu, count=c)
+
+    return Optimizer(init, update)
+
+
+REGISTRY = {"sgd": sgd, "momentum": momentum, "adamw": adamw}
+
+
+def make(name: str, **kw) -> Optimizer:
+    return REGISTRY[name](**kw)

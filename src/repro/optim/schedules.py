@@ -1,0 +1,50 @@
+"""Learning-rate schedules.
+
+Includes the paper's exponentially-decayed rate η(k) = η₀·δᵏ (§6, η₀ = 0.1,
+δ = 0.95 per round) and MiniCPM's WSD (Warmup-Stable-Decay) schedule
+[arXiv:2404.06395] used by the minicpm-2b assigned architecture.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(eta0: float):
+    return lambda step: jnp.float32(eta0)
+
+
+def exponential(eta0: float, delta: float = 0.95, decay_every: int = 1):
+    """The paper's η(k) = η₀ · δ^k (per ``decay_every`` rounds)."""
+    def fn(step):
+        return jnp.float32(eta0) * jnp.float32(delta) ** (step // decay_every)
+    return fn
+
+
+def cosine(eta0: float, total_steps: int, warmup: int = 0, eta_min: float = 0.0):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = eta0 * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0, 1)
+        cos = eta_min + 0.5 * (eta0 - eta_min) * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos).astype(jnp.float32)
+    return fn
+
+
+def wsd(eta0: float, total_steps: int, warmup_frac: float = 0.01,
+        decay_frac: float = 0.1, eta_min_frac: float = 0.1):
+    """Warmup-Stable-Decay (MiniCPM): linear warmup → flat → exponential decay."""
+    warmup = max(1, int(warmup_frac * total_steps))
+    decay_start = int(total_steps * (1 - decay_frac))
+    eta_min = eta0 * eta_min_frac
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = eta0 * step / warmup
+        stable = jnp.float32(eta0)
+        prog = jnp.clip((step - decay_start)
+                        / jnp.maximum(total_steps - decay_start, 1), 0, 1)
+        decay = eta0 * (eta_min / eta0) ** prog
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < decay_start, stable, decay))
+        return out.astype(jnp.float32)
+    return fn

@@ -1,0 +1,14 @@
+from repro.utils.tree import (
+    tree_stack,
+    tree_unstack,
+    tree_zeros_like,
+    tree_axpy,
+    tree_scale,
+    tree_add,
+    tree_sub,
+    tree_dot,
+    tree_norm,
+    tree_size,
+    flatten_to_vector,
+    unflatten_from_vector,
+)

@@ -1,0 +1,78 @@
+"""Pytree utilities used across the framework.
+
+The decentralized simulator keeps all N workers' parameters as a single pytree
+whose leaves carry a leading worker axis (``tree_stack``).  The gossip mixing
+step then operates on that axis; everything here is jit-friendly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_stack(trees):
+    """Stack a list of identically-structured pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree, n):
+    """Inverse of :func:`tree_stack`: a list of n pytrees."""
+    return [jax.tree.map(lambda x, i=i: x[i], tree) for i in range(n)]
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_axpy(a, x, y):
+    """a * x + y, leafwise."""
+    return jax.tree.map(lambda xi, yi: a * xi + yi, x, y)
+
+
+def tree_scale(a, x):
+    return jax.tree.map(lambda xi: a * xi, x)
+
+
+def tree_add(x, y):
+    return jax.tree.map(jnp.add, x, y)
+
+
+def tree_sub(x, y):
+    return jax.tree.map(jnp.subtract, x, y)
+
+
+def tree_dot(x, y):
+    leaves = jax.tree.leaves(jax.tree.map(lambda a, b: jnp.vdot(a, b), x, y))
+    return sum(leaves)
+
+
+def tree_norm(x):
+    return jnp.sqrt(tree_dot(x, x))
+
+
+def tree_size(tree) -> int:
+    """Total number of scalars in the tree (static)."""
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
+
+
+def flatten_to_vector(tree):
+    """Flatten a pytree into a single 1-D vector (and return an unflattener)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [l.shape for l in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+    vec = jnp.concatenate([jnp.ravel(l) for l in leaves]) if leaves else jnp.zeros((0,))
+
+    def unflatten(v):
+        out, off = [], 0
+        for s, sz in zip(shapes, sizes):
+            out.append(jnp.reshape(v[off:off + sz], s))
+            off += sz
+        return jax.tree.unflatten(treedef, out)
+
+    return vec, unflatten
+
+
+def unflatten_from_vector(vec, like):
+    _, unflatten = flatten_to_vector(like)
+    return unflatten(vec)

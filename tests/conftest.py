@@ -1,0 +1,14 @@
+import os
+
+# Tests run on the single real CPU device; only the dry-run uses 512
+# placeholder devices (and only tests/test_dryrun.py spawns subprocesses for
+# that).  Keep numerics deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

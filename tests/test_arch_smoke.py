@@ -1,0 +1,157 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For each of the 10 assigned architectures: instantiate the REDUCED variant
+(≤2 layers / pattern, d_model ≤ 512, ≤4 experts), run one forward and one
+train step on CPU, assert output shapes and no NaNs; run one decode step; and
+check forward↔decode consistency (exactly for non-MoE, drop-free-capacity
+MoE for the rest).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.models import (decode_step, forward, init_decode_state, init_model,
+                          lm_loss, param_count)
+from repro.models.multimodal import make_stub_prefix
+from repro.models.transformer import prefill
+from repro.optim import apply_updates, sgd
+
+
+def _setup(name, **cfg_over):
+    cfg = get_config(name).reduced()
+    if cfg_over:
+        cfg = dataclasses.replace(cfg, **cfg_over)
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    B, T = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.frontend:
+        batch["prefix"] = make_stub_prefix(jax.random.PRNGKey(2), cfg, B)
+    return cfg, params, batch
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+class TestArchSmoke:
+    def test_reduced_config_bounds(self, name):
+        cfg = get_config(name).reduced()
+        assert cfg.n_layers <= 3
+        assert cfg.d_model <= 512
+        assert cfg.n_experts <= 4
+
+    def test_forward_shapes_no_nans(self, name):
+        cfg, params, batch = _setup(name)
+        logits, aux = forward(params, cfg, batch["tokens"],
+                              prefix_embeds=batch.get("prefix"))
+        B, T = batch["tokens"].shape
+        assert logits.shape == (B, T, cfg.vocab_size)
+        assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+        assert np.isfinite(float(aux))
+
+    def test_one_train_step_decreases_loss(self, name):
+        cfg, params, batch = _setup(name)
+        opt = sgd()
+        loss_fn = lambda p: lm_loss(p, cfg, batch)
+        l0, g = jax.value_and_grad(loss_fn)(params)
+        upd, _ = opt.update(g, opt.init(params), params, jnp.float32(0.5))
+        params2 = apply_updates(params, upd)
+        l1 = loss_fn(params2)
+        assert np.isfinite(float(l0)) and np.isfinite(float(l1))
+        assert float(l1) < float(l0)
+
+    def test_decode_step_shapes(self, name):
+        cfg, params, batch = _setup(name)
+        B = batch["tokens"].shape[0]
+        st = init_decode_state(cfg, B, 32)
+        logits, st2 = decode_step(params, cfg, batch["tokens"][:, 0], st,
+                                  jnp.int32(0))
+        assert logits.shape == (B, cfg.vocab_size)
+        assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+        # state structure preserved
+        jax.tree.map(lambda a, b: (_ for _ in ()).throw(AssertionError())
+                     if a.shape != b.shape else None, st, st2)
+
+    def test_prefill_matches_forward_last_token(self, name):
+        over = {"moe_capacity_factor": 64.0} if "moe" in get_config(name).family else {}
+        cfg, params, batch = _setup(name, **over)
+        logits, _ = forward(params, cfg, batch["tokens"],
+                            prefix_embeds=batch.get("prefix"))
+        last, states = prefill(params, cfg, batch["tokens"], cache_len=64,
+                               prefix_embeds=batch.get("prefix"))
+        np.testing.assert_allclose(np.asarray(last),
+                                   np.asarray(logits[:, -1]), atol=1e-4)
+
+    def test_decode_chain_matches_forward(self, name):
+        over = {"moe_capacity_factor": 64.0} if "moe" in get_config(name).family else {}
+        cfg, params, batch = _setup(name, **over)
+        toks = batch["tokens"][:1, :8]
+        pf = batch.get("prefix")
+        pf = pf[:1] if pf is not None else None
+        logits_full, _ = forward(params, cfg, toks, prefix_embeds=pf)
+        st = init_decode_state(cfg, 1, 32)
+        off = cfg.n_prefix_tokens if cfg.frontend else 0
+        if cfg.frontend:
+            # prefix is consumed via prefill; decode continues after it
+            _, st = prefill(params, cfg, toks[:, :1], cache_len=32,
+                            prefix_embeds=pf)
+            lg, st = decode_step(params, cfg, toks[0, 1][None], st,
+                                 jnp.int32(off + 1))
+            assert np.all(np.isfinite(np.asarray(lg, np.float32)))
+            return
+        outs = []
+        for t in range(8):
+            lg, st = decode_step(params, cfg, toks[:, t], st, jnp.int32(t))
+            outs.append(lg)
+        dec = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(dec), np.asarray(logits_full),
+                                   atol=2e-4)
+
+    def test_param_count_positive(self, name):
+        cfg = get_config(name)
+        n = param_count(cfg.reduced())
+        assert n > 1e5
+
+
+class TestFullConfigMetadata:
+    """The FULL configs are exercised only via the dry-run; here we verify
+    their analytic metadata matches the assignment table."""
+
+    @pytest.mark.parametrize("name,layers,d_model,vocab", [
+        ("deepseek-67b", 95, 8192, 102400),
+        ("rwkv6-1.6b", 24, 2048, 65536),
+        ("minicpm-2b", 40, 2304, 122753),
+        ("musicgen-large", 48, 2048, 2048),
+        ("grok-1-314b", 64, 6144, 131072),
+        ("mistral-nemo-12b", 40, 5120, 131072),
+        ("arctic-480b", 35, 7168, 32000),
+        ("llava-next-mistral-7b", 32, 4096, 32000),
+        ("recurrentgemma-2b", 26, 2560, 256000),
+        ("qwen3-8b", 36, 4096, 151936),
+    ])
+    def test_assignment_table(self, name, layers, d_model, vocab):
+        cfg = get_config(name)
+        assert cfg.n_layers == layers
+        assert cfg.d_model == d_model
+        assert cfg.vocab_size == vocab
+
+    @pytest.mark.parametrize("name,lo,hi", [
+        ("deepseek-67b", 60e9, 75e9),
+        ("grok-1-314b", 290e9, 340e9),
+        ("arctic-480b", 440e9, 520e9),
+        ("mistral-nemo-12b", 11e9, 14e9),
+        ("qwen3-8b", 7e9, 10e9),
+        ("rwkv6-1.6b", 1.2e9, 2.2e9),
+        ("recurrentgemma-2b", 2.0e9, 3.6e9),
+        ("minicpm-2b", 2.0e9, 3.3e9),
+    ])
+    def test_param_counts_match_names(self, name, lo, hi):
+        n = param_count(get_config(name))
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B params"
+
+    def test_moe_active_counts(self):
+        from repro.models import active_param_count
+        g = get_config("grok-1-314b")
+        assert active_param_count(g) < 0.5 * param_count(g)

@@ -1,0 +1,85 @@
+"""Consensus-matrix properties (paper Assumption 1 and Lemmas 1–2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import consensus, topology
+
+
+def _random_edges(n, rng, p=0.4):
+    edges = []
+    for i in range(n):
+        for j in range(i + 1, n):
+            if rng.random() < p:
+                edges.append((i, j))
+    return edges
+
+
+class TestMetropolis:
+    def test_empty_edges_is_identity(self):
+        P = consensus.metropolis_matrix(5, [])
+        assert np.allclose(P, np.eye(5))
+
+    def test_single_edge(self):
+        P = consensus.metropolis_matrix(3, [(0, 1)])
+        assert P[0, 1] == pytest.approx(0.5)
+        assert P[0, 0] == pytest.approx(0.5)
+        assert P[2, 2] == pytest.approx(1.0)
+        assert consensus.is_doubly_stochastic(P)
+
+    def test_rejects_self_edge(self):
+        with pytest.raises(ValueError):
+            consensus.metropolis_matrix(3, [(1, 1)])
+
+    @given(n=st.integers(2, 24), seed=st.integers(0, 1000))
+    @settings(max_examples=60, deadline=None)
+    def test_doubly_stochastic_for_any_active_set(self, n, seed):
+        """Assumption 1: Metropolis weights are doubly stochastic for every
+        symmetric active-edge set."""
+        rng = np.random.default_rng(seed)
+        P = consensus.metropolis_matrix(n, _random_edges(n, rng))
+        assert consensus.is_doubly_stochastic(P)
+
+    @given(n=st.integers(2, 12), seed=st.integers(0, 200))
+    @settings(max_examples=30, deadline=None)
+    def test_nonnegative_diagonal(self, n, seed):
+        """Waiting-count weights keep P_ii = 1 − Σ P_ij ≥ 0."""
+        rng = np.random.default_rng(seed)
+        P = consensus.metropolis_matrix(n, _random_edges(n, rng, p=0.9))
+        assert np.all(np.diag(P) >= -1e-12)
+
+
+class TestProducts:
+    def test_product_contracts_to_uniform(self):
+        """Lemma 1/2: products of connected-graph Metropolis matrices
+        converge geometrically to (1/N)·11ᵀ."""
+        n = 8
+        g = topology.ring(n)
+        P = consensus.metropolis_matrix(n, g.edges)
+        gaps = []
+        Phi = np.eye(n)
+        for k in range(60):
+            Phi = Phi @ P
+            gaps.append(consensus.contraction_to_uniform(Phi))
+        assert gaps[-1] < 1e-3
+        # geometric decay: later gaps shrink by a stable ratio
+        assert gaps[50] < gaps[25] < gaps[10]
+
+    def test_time_varying_product_doubly_stochastic(self):
+        rng = np.random.default_rng(1)
+        n = 10
+        mats = [consensus.metropolis_matrix(n, _random_edges(n, rng))
+                for _ in range(20)]
+        Phi = consensus.consensus_product(mats)
+        assert consensus.is_doubly_stochastic(Phi, tol=1e-8)
+
+    def test_spectral_gap_positive_for_connected(self):
+        g = topology.erdos_renyi(12, 0.3, seed=2)
+        P = consensus.metropolis_matrix(12, g.edges)
+        assert consensus.spectral_gap(P) > 0
+
+    def test_beta_min_positive(self):
+        n = 6
+        P = consensus.metropolis_matrix(n, [(0, 1), (2, 3)])
+        beta = consensus.beta_min_positive([P])
+        assert 0 < beta <= 0.5

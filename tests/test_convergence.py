@@ -1,0 +1,104 @@
+"""End-to-end convergence: the paper's headline claims at test scale.
+
+These are the system-level behaviour tests — DSGD-AAU must (i) converge,
+(ii) match synchronous DSGD per-iteration while being much faster in virtual
+wall-clock under stragglers, and (iii) beat the fully-asynchronous baselines
+for a fixed virtual-time budget (Fig. 3/4 & Table 2 at miniature scale).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.baselines import make_scheduler
+from repro.core.runner import DecentralizedTrainer
+from repro.core.straggler import StragglerModel
+from repro.data.synthetic import ClassificationData
+
+N = 16
+DATA = ClassificationData(n_workers=N, d=32, n_classes=10,
+                          partition="label_shard", classes_per_worker=5,
+                          samples_per_worker=256, seed=0)
+
+
+def loss_fn(params, batch):
+    logits = batch["x"] @ params["w1"]
+    logits = jax.nn.relu(logits) @ params["w2"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], axis=1))
+
+
+def eval_fn(params, batch):
+    logits = jax.nn.relu(batch["x"] @ params["w1"]) @ params["w2"]
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+    return loss_fn(params, batch), acc
+
+
+def init_fn(key):
+    k1, k2 = jax.random.split(key)
+    return {"w1": jax.random.normal(k1, (32, 64)) * 0.1,
+            "w2": jax.random.normal(k2, (64, 10)) * 0.1}
+
+
+def _trainer(alg, seed=0, **kw):
+    g = topology.erdos_renyi(N, 0.3, seed=3)
+    sm = StragglerModel(n=N, straggler_prob=0.15, slowdown=8.0, seed=seed)
+    sched = make_scheduler(alg, g, sm, **kw)
+    return DecentralizedTrainer(
+        sched, loss_fn, init_fn,
+        lambda w, s: DATA.batch(w, s, batch_size=32),
+        DATA.eval_batch(512), eval_fn=eval_fn, eta0=0.2, seed=seed)
+
+
+class TestConvergence:
+    def test_aau_converges(self):
+        res = _trainer("dsgd_aau").run(max_events=150, eval_every=50)
+        first = res.history[0].loss
+        assert res.final_loss < first * 0.7
+        assert res.final_metric > 0.4
+
+    def test_aau_matches_sync_per_virtual_time_budget(self):
+        """For an equal virtual-time budget, AAU reaches lower loss than the
+        straggler-stalled synchronous baseline (paper Fig. 4)."""
+        budget = 120.0
+        aau = _trainer("dsgd_aau").run(max_time=budget, eval_every=50)
+        syn = _trainer("dsgd_sync").run(max_time=budget, eval_every=50)
+        assert aau.final_loss < syn.final_loss
+
+    def test_aau_beats_async_baselines_per_iteration(self):
+        """Fig. 3: per-iteration, AAU's larger adaptive active sets dominate
+        the single-worker updates of AD-PSGD / AGP."""
+        res = {alg: _trainer(alg).run(max_events=60, eval_every=60)
+               for alg in ("dsgd_aau", "ad_psgd", "agp")}
+        assert res["dsgd_aau"].final_loss < res["ad_psgd"].final_loss
+        assert res["dsgd_aau"].final_loss < res["agp"].final_loss
+
+    def test_aau_beats_prague_and_sync_in_time_budget(self):
+        """Fig. 4 / Table 2: for a fixed virtual wall-clock budget AAU beats
+        the barrier-bound algorithms (sync; Prague's group barriers)."""
+        budget = 120.0
+        res = {alg: _trainer(alg).run(max_time=budget, eval_every=100)
+               for alg in ("dsgd_aau", "prague", "dsgd_sync")}
+        assert res["dsgd_aau"].final_loss < res["prague"].final_loss
+        assert res["dsgd_aau"].final_loss < res["dsgd_sync"].final_loss
+
+    def test_communication_accounting(self):
+        res = _trainer("dsgd_aau").run(max_events=50, eval_every=25)
+        assert res.total_comm_copies > 0
+        assert res.comm_bytes() == res.total_comm_copies * res.param_count * 4
+
+    def test_consensus_across_workers(self):
+        """After training, worker parameters are near consensus (bounded
+        disagreement — the quantity Theorem 1's proof controls)."""
+        tr = _trainer("dsgd_aau")
+        tr.run(max_events=200, eval_every=200)
+        W = np.asarray(tr.W["w1"])
+        mean = W.mean(0)
+        disagreement = np.max(np.linalg.norm(W - mean, axis=(1, 2)))
+        assert disagreement < 0.5 * np.linalg.norm(mean)
+
+    def test_deterministic_runs(self):
+        r1 = _trainer("dsgd_aau", seed=5).run(max_events=30, eval_every=30)
+        r2 = _trainer("dsgd_aau", seed=5).run(max_events=30, eval_every=30)
+        assert r1.final_loss == pytest.approx(r2.final_loss, rel=1e-5)

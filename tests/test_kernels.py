@@ -1,0 +1,125 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.consensus import metropolis_matrix
+from repro.kernels.gossip_mix import gossip_mix, gossip_mix_ref
+from repro.kernels.linear_scan import linear_scan, linear_scan_ref
+from repro.kernels.swa_attention import swa_attention, swa_attention_ref
+
+
+def _tol(dt):
+    return dict(atol=2e-2, rtol=2e-2) if dt == jnp.bfloat16 else dict(atol=2e-5, rtol=1e-4)
+
+
+class TestGossipMix:
+    @pytest.mark.parametrize("n,d", [(4, 128), (16, 1024), (13, 257), (32, 2048),
+                                     (7, 64), (128, 512)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, n, d, dtype):
+        key = jax.random.PRNGKey(n * d)
+        W = jax.random.normal(key, (n, d)).astype(dtype)
+        P = jnp.asarray(metropolis_matrix(
+            n, [(i, (i + 1) % n) for i in range(n - 1)]), dtype)
+        out = gossip_mix(W, P, block_d=256)
+        ref = gossip_mix_ref(W, P)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), **_tol(dtype))
+
+    def test_multidim_leaves(self):
+        n = 8
+        W = jax.random.normal(jax.random.PRNGKey(0), (n, 3, 5, 7))
+        P = jnp.eye(n) * 0.5 + 0.5 / n
+        P = P / P.sum(0, keepdims=True)
+        out = gossip_mix(W, P)
+        ref = gossip_mix_ref(W.reshape(n, -1), P).reshape(W.shape)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+    def test_identity_matrix(self):
+        W = jax.random.normal(jax.random.PRNGKey(1), (6, 100))
+        out = gossip_mix(W, jnp.eye(6))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(W), atol=1e-6)
+
+
+class TestLinearScan:
+    @pytest.mark.parametrize("B,T,D", [(1, 32, 64), (2, 128, 96), (1, 100, 33),
+                                       (3, 17, 8), (2, 256, 512)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_oracle(self, B, T, D, dtype):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(B * T + D))
+        a = jax.nn.sigmoid(jax.random.normal(k1, (B, T, D))).astype(dtype)
+        x = jax.random.normal(k2, (B, T, D)).astype(dtype)
+        out = linear_scan(a, x, block_t=32, block_d=64)
+        ref = linear_scan_ref(a, x)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), **_tol(dtype))
+
+    def test_zero_decay_copies_input(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 16, 8))
+        out = linear_scan(jnp.zeros_like(x), x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=1e-6)
+
+    def test_unit_decay_cumsum(self):
+        x = jnp.ones((1, 10, 4))
+        out = linear_scan(jnp.ones_like(x), x)
+        np.testing.assert_allclose(np.asarray(out)[0, :, 0],
+                                   np.arange(1, 11, dtype=np.float32), atol=1e-5)
+
+
+class TestSWAAttention:
+    @pytest.mark.parametrize("B,T,H,KV,dh,w", [
+        (1, 128, 4, 2, 32, 40), (2, 256, 4, 4, 64, 100),
+        (1, 192, 8, 1, 16, 64), (1, 64, 2, 2, 128, 16),
+    ])
+    def test_matches_oracle(self, B, T, H, KV, dh, w):
+        ks = jax.random.split(jax.random.PRNGKey(T + w), 3)
+        q = jax.random.normal(ks[0], (B, T, H, dh))
+        k = jax.random.normal(ks[1], (B, T, KV, dh))
+        v = jax.random.normal(ks[2], (B, T, KV, dh))
+        out = swa_attention(q, k, v, window=w, block_q=64, block_k=64)
+        qf = q.transpose(0, 2, 1, 3).reshape(B * H, T, dh)
+        kf = k.transpose(0, 2, 1, 3).reshape(B * KV, T, dh)
+        vf = v.transpose(0, 2, 1, 3).reshape(B * KV, T, dh)
+        ref = swa_attention_ref(qf, kf, vf, window=w, n_groups=H // KV)
+        ref = ref.reshape(B, H, T, dh).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+    def test_bf16(self):
+        B, T, H, KV, dh, w = 1, 128, 2, 2, 32, 32
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, T, H, dh)).astype(jnp.bfloat16)
+        k = jax.random.normal(ks[1], (B, T, KV, dh)).astype(jnp.bfloat16)
+        v = jax.random.normal(ks[2], (B, T, KV, dh)).astype(jnp.bfloat16)
+        out = swa_attention(q, k, v, window=w, block_q=64, block_k=64)
+        qf = q.transpose(0, 2, 1, 3).reshape(B * H, T, dh)
+        kf = k.transpose(0, 2, 1, 3).reshape(B * KV, T, dh)
+        vf = v.transpose(0, 2, 1, 3).reshape(B * KV, T, dh)
+        ref = swa_attention_ref(qf, kf, vf, window=w, n_groups=1)
+        ref = ref.reshape(B, H, T, dh).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), atol=3e-2)
+
+    def test_window_one_attends_self_only(self):
+        B, T, H, dh = 1, 64, 1, 16
+        q = jax.random.normal(jax.random.PRNGKey(0), (B, T, H, dh))
+        v = jax.random.normal(jax.random.PRNGKey(2), (B, T, H, dh))
+        out = swa_attention(q, jnp.ones_like(q), v, window=1,
+                            block_q=32, block_k=32)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(v), atol=1e-5)
+
+    def test_nondivisible_T_padded(self):
+        B, T, H, dh, w = 1, 70, 2, 16, 20
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(ks[0], (B, T, H, dh))
+        k = jax.random.normal(ks[1], (B, T, H, dh))
+        v = jax.random.normal(ks[2], (B, T, H, dh))
+        out = swa_attention(q, k, v, window=w, block_q=32, block_k=32)
+        assert out.shape == (B, T, H, dh)
+        qf = q.transpose(0, 2, 1, 3).reshape(B * H, T, dh)
+        kf = k.transpose(0, 2, 1, 3).reshape(B * H, T, dh)
+        vf = v.transpose(0, 2, 1, 3).reshape(B * H, T, dh)
+        ref = swa_attention_ref(qf, kf, vf, window=w, n_groups=1)
+        ref = ref.reshape(B, H, T, dh).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)

@@ -1,0 +1,134 @@
+"""Event-stream invariants for DSGD-AAU and the baseline schedulers."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology
+from repro.core.baselines import make_scheduler
+from repro.core.consensus import is_doubly_stochastic
+from repro.core.straggler import StragglerModel
+
+
+def take(sched, k):
+    return list(itertools.islice(sched.events(), k))
+
+
+def _mk(alg, n=12, seed=0, **kw):
+    g = topology.erdos_renyi(n, 0.35, seed=seed)
+    sm = StragglerModel(n=n, straggler_prob=0.2, slowdown=6.0, seed=seed)
+    return make_scheduler(alg, g, sm, **kw), g
+
+
+ALL_ALGS = ["dsgd_aau", "dsgd_sync", "ad_psgd", "prague", "agp"]
+
+
+class TestEventStreams:
+    @pytest.mark.parametrize("alg", ALL_ALGS)
+    def test_monotone_time_and_counter(self, alg):
+        sched, _ = _mk(alg)
+        evs = take(sched, 50)
+        ks = [e.k for e in evs]
+        assert ks == list(range(50))
+        ts = [e.time for e in evs]
+        assert all(t2 >= t1 for t1, t2 in zip(ts, ts[1:]))
+
+    @pytest.mark.parametrize("alg", ALL_ALGS)
+    def test_mass_conserving(self, alg):
+        """In the W·P orientation, Σ_j out_j = Σ_i W_i ⇔ rows sum to 1."""
+        sched, _ = _mk(alg)
+        for ev in take(sched, 40):
+            assert np.allclose(ev.P.sum(axis=1), 1.0), alg
+            assert np.all(ev.P >= -1e-12)
+
+    @pytest.mark.parametrize("alg", ["dsgd_aau", "dsgd_sync", "ad_psgd", "prague"])
+    def test_doubly_stochastic_for_undirected_algs(self, alg):
+        sched, _ = _mk(alg)
+        for ev in take(sched, 40):
+            assert is_doubly_stochastic(ev.P), alg
+
+    @pytest.mark.parametrize("alg", ALL_ALGS)
+    def test_active_edges_subset_of_graph(self, alg):
+        sched, g = _mk(alg)
+        for ev in take(sched, 40):
+            if alg == "prague":
+                continue  # Prague groups are logical, not topology-bound
+            for i, j in ev.active_edges:
+                assert g.adj[i, j], (alg, i, j)
+
+    @pytest.mark.parametrize("alg", ALL_ALGS)
+    def test_inactive_workers_untouched(self, alg):
+        """Alg.1 line 7: rows/cols of inactive AND non-neighbor workers are e_i."""
+        sched, _ = _mk(alg)
+        for ev in take(sched, 30):
+            touched = set(np.nonzero(ev.grad_workers)[0].tolist())
+            for i, j in ev.active_edges:
+                touched |= {i, j}
+            for w in range(sched.n):
+                if w not in touched:
+                    assert ev.P[w, w] == pytest.approx(1.0)
+                    assert ev.P[w].sum() == pytest.approx(1.0)
+
+
+class TestAAUSemantics:
+    def test_sync_waits_for_slowest(self):
+        """Synchronous iterations take ≥ the straggler slowdown sometimes."""
+        sched, _ = _mk("dsgd_sync", n=16)
+        evs = take(sched, 30)
+        dts = np.diff([0.0] + [e.time for e in evs])
+        assert dts.max() > 4.0  # barrier hits a 6× straggler
+
+    def test_aau_faster_than_sync_in_virtual_time(self):
+        a, _ = _mk("dsgd_aau", n=16)
+        s, _ = _mk("dsgd_sync", n=16)
+        ta = take(a, 60)[-1].time
+        ts = take(s, 60)[-1].time
+        assert ta < ts
+
+    def test_aau_active_sets_adaptive(self):
+        """a(k) — the active-set size — varies over iterations (the paper's
+        'adaptive' property), unlike sync (always N) and AD-PSGD (always 1)."""
+        sched, _ = _mk("dsgd_aau", n=16)
+        sizes = {e.n_active for e in take(sched, 60)}
+        assert len(sizes) > 2
+
+    def test_aau_grad_equals_restart(self):
+        sched, _ = _mk("dsgd_aau")
+        for ev in take(sched, 30):
+            assert np.array_equal(ev.grad_workers, ev.restart_workers)
+
+    def test_adpsgd_staleness_exists(self):
+        """AD-PSGD averages into a neighbor that is NOT restarted — the
+        staleness mechanism the paper criticizes (Fig. 1b)."""
+        sched, _ = _mk("ad_psgd")
+        found = False
+        for ev in take(sched, 50):
+            touched = {i for e in ev.active_edges for i in e}
+            restarted = set(np.nonzero(ev.restart_workers)[0].tolist())
+            if touched - restarted:
+                found = True
+                break
+        assert found
+
+    def test_prague_groups_have_expected_size(self):
+        sched, _ = _mk("prague", group_size=4)
+        sizes = [e.n_active for e in take(sched, 40)]
+        assert max(sizes) <= 4 and min(sizes) >= 1
+
+    @given(seed=st.integers(0, 50), n=st.sampled_from([2, 3, 5, 8, 16]))
+    @settings(max_examples=20, deadline=None)
+    def test_aau_events_always_fire(self, seed, n):
+        """No deadlock: the stream always produces events (progress guarantee
+        from the component-merge pathsearch condition)."""
+        g = topology.erdos_renyi(n, 0.5, seed=seed)
+        sm = StragglerModel(n=n, straggler_prob=0.3, slowdown=10.0, seed=seed)
+        sched = make_scheduler("dsgd_aau", g, sm)
+        evs = take(sched, 20)
+        assert len(evs) == 20
+
+    def test_determinism(self):
+        e1 = take(_mk("dsgd_aau", seed=7)[0], 20)
+        e2 = take(_mk("dsgd_aau", seed=7)[0], 20)
+        for a, b in zip(e1, e2):
+            assert a.time == b.time and np.array_equal(a.P, b.P)

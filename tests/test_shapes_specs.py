@@ -1,0 +1,104 @@
+"""Input-shape table, SWA long-context variants, and abstract spec coverage."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, get_config
+from repro.launch import shapes as SH
+from repro.models import decode_step, init_decode_state, init_model
+from repro.models.layers import KVCache
+
+
+class TestShapeTable:
+    def test_assigned_shapes(self):
+        assert SH.SHAPES["train_4k"].seq_len == 4096
+        assert SH.SHAPES["train_4k"].global_batch == 256
+        assert SH.SHAPES["prefill_32k"].seq_len == 32768
+        assert SH.SHAPES["prefill_32k"].global_batch == 32
+        assert SH.SHAPES["decode_32k"].global_batch == 128
+        assert SH.SHAPES["long_500k"].seq_len == 524288
+        assert SH.SHAPES["long_500k"].global_batch == 1
+
+    @pytest.mark.parametrize("name", ASSIGNED)
+    def test_long500k_variant_is_subquadratic(self, name):
+        cfg = SH.shape_config(get_config(name), SH.SHAPES["long_500k"])
+        if cfg.family == "ssm":
+            assert cfg.attn_window is None           # O(1) state, no attention
+        else:
+            assert cfg.attn_window is not None       # native (hybrid) or SWA
+            assert cfg.attn_window <= SH.SWA_WINDOW
+
+    @pytest.mark.parametrize("name", ASSIGNED)
+    def test_decode_state_memory_is_windowed(self, name):
+        """long_500k decode state must NOT scale with the 524k history."""
+        cfg = SH.shape_config(get_config(name), SH.SHAPES["long_500k"])
+        state = jax.eval_shape(
+            lambda: init_decode_state(cfg, 1, SH.SHAPES["long_500k"].seq_len,
+                                      filled=True))
+        total = sum(np.prod(l.shape) * l.dtype.itemsize
+                    for l in jax.tree.leaves(state))
+        # window-bounded: << seq_len × kv × dh × layers at full length
+        assert total < 4e9, f"{name}: {total/2**30:.1f} GiB decode state"
+
+    def test_train_specs_worker_stacked(self):
+        from repro.launch.mesh import TrainAxes
+        cfg = get_config("qwen3-8b")
+        axes = TrainAxes(pod=None, worker="worker", fsdp="fsdp", model="model")
+        batch, specs = SH.train_input_specs(cfg, SH.SHAPES["train_4k"], 4, axes)
+        assert batch["tokens"].shape == (4, 64, 4096)
+        assert tuple(specs["tokens"])[0] == "worker"
+
+    def test_train_specs_reject_indivisible_workers(self):
+        from repro.launch.mesh import TrainAxes
+        cfg = get_config("qwen3-8b")
+        axes = TrainAxes(pod=None, worker="worker", fsdp=None, model="model")
+        with pytest.raises(ValueError):
+            SH.train_input_specs(cfg, SH.SHAPES["train_4k"], 7, axes)
+
+
+class TestLongContextDecode:
+    """Numerical long-context decode on reduced configs: rolling-window SWA
+    must equal full attention restricted to the window."""
+
+    def test_swa_decode_matches_windowed_reference(self):
+        cfg = get_config("mistral-nemo-12b").reduced()
+        cfg = dataclasses.replace(cfg, attn_window=16)
+        params = init_model(jax.random.PRNGKey(0), cfg)
+        B, T = 1, 40   # decode well past the window
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                                  cfg.vocab_size)
+        # reference: same model, full-length cache (window mask still applies)
+        big = init_decode_state(dataclasses.replace(cfg, attn_window=None),
+                                B, T)
+        # rolling: window-sized cache
+        small = init_decode_state(cfg, B, T)
+        # cache sizes differ: rolling is window-bounded
+        size_small = small.k.shape[2] if hasattr(small, "k") else \
+            jax.tree.leaves(small)[0].shape
+        lg_roll = None
+        st = small
+        cfg_full = dataclasses.replace(cfg)  # same window in both paths
+        st_full = init_decode_state(
+            dataclasses.replace(cfg, attn_window=10**9), B, T)
+        stf = st_full
+        outs_roll, outs_full = [], []
+        for t in range(T):
+            lr, st = decode_step(params, cfg, toks[:, t], st, jnp.int32(t))
+            lf, stf = decode_step(params, cfg_full, toks[:, t], stf,
+                                  jnp.int32(t))
+            outs_roll.append(lr)
+            outs_full.append(lf)
+        # rolling-window logits == full-cache logits (mask equivalence)
+        np.testing.assert_allclose(np.asarray(jnp.stack(outs_roll)),
+                                   np.asarray(jnp.stack(outs_full)), atol=2e-4)
+
+    def test_rwkv_state_constant_memory(self):
+        cfg = get_config("rwkv6-1.6b").reduced()
+        s1 = jax.eval_shape(lambda: init_decode_state(cfg, 1, 1024))
+        s2 = jax.eval_shape(lambda: init_decode_state(cfg, 1, 524288))
+        n1 = sum(np.prod(l.shape) for l in jax.tree.leaves(s1))
+        n2 = sum(np.prod(l.shape) for l in jax.tree.leaves(s2))
+        assert n1 == n2  # O(1) in history length

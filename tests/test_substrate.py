@@ -1,0 +1,143 @@
+"""Data pipeline, optimizers, schedules, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.data import CharLMData, ClassificationData, TokenStream, TokenStreamConfig
+from repro.optim import adamw, apply_updates, momentum, sgd
+from repro.optim.schedules import constant, cosine, exponential, wsd
+
+
+class TestData:
+    def test_label_shard_non_iid(self):
+        d = ClassificationData(n_workers=8, n_classes=10, classes_per_worker=3,
+                               samples_per_worker=64, seed=0)
+        assert d.heterogeneity() > 0.3
+        for w in range(8):
+            b = d.batch(w, 0, 16)
+            labels = set(np.asarray(b["y"]).tolist())
+            assert len(labels) <= 3
+
+    def test_iid_partition_low_heterogeneity(self):
+        d = ClassificationData(n_workers=8, partition="iid",
+                               samples_per_worker=64)
+        assert d.heterogeneity() < 0.25
+
+    def test_dirichlet_partition(self):
+        d = ClassificationData(n_workers=4, partition="dirichlet",
+                               dirichlet_alpha=0.1, samples_per_worker=64)
+        assert d.heterogeneity() > 0.3
+
+    def test_batches_deterministic(self):
+        d = ClassificationData(n_workers=2, samples_per_worker=32, seed=1)
+        b1 = d.batch(0, 5, 8)
+        b2 = d.batch(0, 5, 8)
+        np.testing.assert_array_equal(np.asarray(b1["x"]), np.asarray(b2["x"]))
+
+    def test_charlm_stream(self):
+        d = CharLMData(n_workers=3, vocab=40, seq_len=16)
+        b = d.batch(1, 0, 4)
+        assert b["tokens"].shape == (4, 16)
+        assert int(b["tokens"].max()) < 40
+
+    def test_token_stream_sharding_and_resume(self):
+        cfg = TokenStreamConfig(vocab_size=100, seq_len=8, global_batch=8,
+                                n_workers=4)
+        s = TokenStream(cfg)
+        b0 = s.worker_batch(0)
+        state = s.state_dict()
+        b1 = s.worker_batch(0)
+        s2 = TokenStream(cfg)
+        s2.load_state_dict(state)
+        b1r = s2.worker_batch(0)
+        np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                      np.asarray(b1r["tokens"]))
+        assert not np.array_equal(np.asarray(b0["tokens"]),
+                                  np.asarray(b1["tokens"]))
+
+    def test_token_stream_worker_distributions_differ(self):
+        cfg = TokenStreamConfig(vocab_size=1000, seq_len=256, global_batch=4,
+                                n_workers=2, worker_shift=0.5)
+        s = TokenStream(cfg)
+        t0 = np.asarray(s.worker_batch(0)["tokens"]).ravel()
+        t1 = np.asarray(s.worker_batch(1)["tokens"]).ravel()
+        assert abs(np.median(t0) - np.median(t1)) > 50
+
+
+class TestOptim:
+    def _quad(self):
+        target = jnp.asarray([1.0, -2.0, 3.0])
+        loss = lambda p: jnp.sum((p["w"] - target) ** 2)
+        return loss, {"w": jnp.zeros(3)}
+
+    @pytest.mark.parametrize("opt", [sgd(), momentum(0.9), adamw()])
+    def test_optimizers_reduce_quadratic(self, opt):
+        loss, params = self._quad()
+        state = opt.init(params)
+        for _ in range(200):
+            g = jax.grad(loss)(params)
+            upd, state = opt.update(g, state, params, jnp.float32(0.05))
+            params = apply_updates(params, upd)
+        assert float(loss(params)) < 1e-2
+
+    def test_adamw_weight_decay(self):
+        opt = adamw(weight_decay=0.5)
+        params = {"w": jnp.ones(2)}
+        state = opt.init(params)
+        g = {"w": jnp.zeros(2)}
+        upd, _ = opt.update(g, state, params, jnp.float32(0.1))
+        assert float(upd["w"][0]) < 0  # decay pulls toward zero
+
+    def test_schedules(self):
+        assert float(constant(0.1)(100)) == pytest.approx(0.1)
+        e = exponential(0.1, 0.95)
+        assert float(e(0)) == pytest.approx(0.1)
+        assert float(e(10)) == pytest.approx(0.1 * 0.95 ** 10)
+        c = cosine(1.0, 100, warmup=10)
+        assert float(c(5)) == pytest.approx(0.5)
+        assert float(c(100)) == pytest.approx(0.0, abs=1e-6)
+        w = wsd(1.0, 1000)
+        assert float(w(5)) < 1.0          # warming up
+        assert float(w(500)) == pytest.approx(1.0)   # stable
+        assert float(w(999)) < 0.2        # decayed
+        assert float(w(1000)) == pytest.approx(0.1, rel=1e-2)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+                "b": {"c": jnp.ones(4, jnp.bfloat16)}}
+        ck.save(3, tree, extra={"note": "x"})
+        restored, extra = ck.restore(tree)
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.asarray(tree["a"]))
+        assert restored["b"]["c"].dtype == jnp.bfloat16
+        assert extra["note"] == "x"
+
+    def test_latest_and_gc(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=2)
+        tree = {"w": jnp.zeros(2)}
+        for s in (1, 2, 3, 4):
+            ck.save(s, tree)
+        assert ck.all_steps() == [3, 4]
+        assert ck.latest_step() == 4
+
+    def test_worker_slice_restore(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        stacked = {"w": jnp.arange(12, dtype=jnp.float32).reshape(4, 3)}
+        ck.save(1, stacked)
+        single = {"w": jnp.zeros(3)}
+        out = ck.restore_worker_slice(single, worker=2)
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(stacked["w"][2]))
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        ck.save(1, {"w": jnp.zeros(3)})
+        with pytest.raises(ValueError):
+            ck.restore({"w": jnp.zeros(4)})

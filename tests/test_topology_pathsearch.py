@@ -1,0 +1,99 @@
+"""Graph constructors + Pathsearch (Algorithm 3) invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology
+from repro.core.pathsearch import PathSearchState
+
+
+class TestTopology:
+    @pytest.mark.parametrize("maker,args", [
+        (topology.ring, (8,)),
+        (topology.fully_connected, (6,)),
+        (topology.torus, (3, 4)),
+        (topology.erdos_renyi, (16, 0.2)),
+        (topology.multipod, (8, 2)),
+    ])
+    def test_connected_symmetric(self, maker, args):
+        g = maker(*args)
+        assert g.is_connected()
+        assert np.array_equal(g.adj, g.adj.T)
+        assert not np.any(np.diag(g.adj))
+
+    def test_ring_degree(self):
+        g = topology.ring(10)
+        assert all(g.degree(i) == 2 for i in range(10))
+
+    def test_torus_degree(self):
+        g = topology.torus(4, 4)
+        assert all(g.degree(i) == 4 for i in range(16))
+
+    @given(n=st.integers(2, 40), p=st.floats(0.0, 1.0), seed=st.integers(0, 100))
+    @settings(max_examples=40, deadline=None)
+    def test_erdos_renyi_always_connected(self, n, p, seed):
+        assert topology.erdos_renyi(n, p, seed=seed).is_connected()
+
+    def test_multipod_cross_edges_sparse(self):
+        g = topology.multipod(16, 2, inter_pod_edges=2)
+        cross = sum(1 for i, j in g.edges if (i < 16) != (j < 16))
+        assert 1 <= cross <= 4  # sparse DCI bridges only
+
+
+class TestPathsearch:
+    @given(n=st.integers(2, 20), seed=st.integers(0, 300))
+    @settings(max_examples=50, deadline=None)
+    def test_epoch_completes_within_n_minus_1_commits(self, n, seed):
+        """The paper's bound B ≤ N−1: an epoch needs at most N−1 committed
+        edges (spanning-tree growth), regardless of finish order."""
+        g = topology.erdos_renyi(n, 0.4, seed=seed)
+        ps = PathSearchState(g)
+        rng = np.random.default_rng(seed)
+        commits = 0
+        guard = 0
+        while not ps.epoch_complete():
+            guard += 1
+            # draws are random subsets; progress per draw is probabilistic —
+            # only a genuine deadlock would exhaust this bound
+            assert guard < 500 * n, "pathsearch failed to make progress"
+            finished = set(rng.choice(n, size=rng.integers(2, n + 1),
+                                      replace=False).tolist())
+            novel = ps.novel_edges(finished)
+            if novel:
+                # commit() dedups candidates that became redundant as earlier
+                # candidates merged their components
+                ps.commit(novel)
+        assert len(ps.committed) <= n - 1
+        assert ps.vertices == set(range(n))
+
+    def test_commit_only_between_components(self):
+        g = topology.fully_connected(4)
+        ps = PathSearchState(g)
+        ps.commit([(0, 1)])
+        # (0,1) already same component -> not novel
+        assert (0, 1) not in ps.novel_edges({0, 1})
+        assert ps.num_components == 3
+        ps.commit([(2, 3)])
+        assert ps.num_components == 2
+        # merging edge between the two components IS novel (impl. note in
+        # pathsearch.py: deviation from the paper's literal condition)
+        novel = ps.novel_edges({0, 2})
+        assert (0, 2) in novel
+        ps.commit(novel)
+        assert ps.epoch_complete()
+
+    def test_reset_epoch(self):
+        g = topology.ring(3)
+        ps = PathSearchState(g)
+        ps.commit([(0, 1), (1, 2)])
+        assert ps.epoch_complete()
+        ps.reset_epoch()
+        assert ps.committed == set() and ps.vertices == set()
+        assert ps.epochs_completed == 1
+        assert not ps.epoch_complete()
+
+    def test_respects_graph_edges(self):
+        g = topology.ring(4)  # edges only (0,1),(1,2),(2,3),(3,0)
+        ps = PathSearchState(g)
+        novel = ps.novel_edges({0, 2})
+        assert novel == []  # 0-2 not a graph edge
