@@ -1,0 +1,117 @@
+"""Events/sec of the legacy per-event trainer vs the block-compiled scan.
+
+The per-event path pays one XLA dispatch, one host-device sync, and one
+host-side batch refresh per ScheduleEvent; the scan path amortizes one
+dispatch over ``block_size`` events with the batch refresh on device.  The
+workload is deliberately *dispatch-bound* (a tiny 2-layer net, AD-PSGD's
+one-event-per-worker-finish stream — the longest of the paper's baselines):
+it isolates the per-event overhead that caps stream throughput at paper
+scale, which is exactly what the block-compiled path removes.
+
+  python -m benchmarks.bench_event_stream          # writes BENCH_event_stream.json
+
+Both trainers are warmed up first (``DecentralizedTrainer.warmup`` compiles
+via a no-op dispatch), so the numbers compare steady-state throughput, not
+compile time.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.core import topology
+from repro.core.baselines import make_scheduler
+from repro.core.runner import DecentralizedTrainer
+from repro.core.straggler import StragglerModel
+from repro.data.synthetic import ClassificationData
+
+ALG = "ad_psgd"          # longest event stream of the paper's baselines
+EVENTS = 1024
+BLOCK_SIZE = 128
+D_IN, D_H, BATCH = 16, 16, 4
+
+_JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_event_stream.json")
+
+
+def _loss(params, batch):
+    h = jax.nn.relu(batch["x"] @ params["w1"])
+    logp = jax.nn.log_softmax(h @ params["w2"])
+    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], axis=1))
+
+
+def _init(key):
+    k1, k2 = jax.random.split(key)
+    return {"w1": jax.random.normal(k1, (D_IN, D_H)) * 0.1,
+            "w2": jax.random.normal(k2, (D_H, 10)) * 0.1}
+
+
+def _make_trainer(mode: str, n: int) -> DecentralizedTrainer:
+    data = ClassificationData(n_workers=n, d=D_IN, samples_per_worker=64,
+                              seed=0)
+    g = topology.erdos_renyi(n, max(0.15, 4.0 / n), seed=1)
+    sm = StragglerModel(n=n, straggler_prob=0.1, slowdown=10.0, seed=0)
+    sched = make_scheduler(ALG, g, sm)
+    # warmup() builds the pool before run() can size it, so pass an explicit
+    # pool covering the observed worst-case restarts/worker of the EVENTS
+    # bound (~81 at N=16); bigger pools measurably slow the per-step gather
+    # on CPU, which would pollute the dispatch-overhead comparison.
+    kw = ({"block_size": BLOCK_SIZE, "batch_pool": 96}
+          if mode == "scan" else {})
+    return DecentralizedTrainer(
+        sched, _loss, _init,
+        lambda w, s: data.batch(w, s, batch_size=BATCH),
+        data.eval_batch(256), eta0=0.2, seed=0, mode=mode, **kw)
+
+
+def _events_per_sec(mode: str, n: int, events: int) -> float:
+    tr = _make_trainer(mode, n)
+    tr.warmup()
+    t0 = time.perf_counter()
+    res = tr.run(max_events=events, eval_every=10 ** 9)
+    jax.block_until_ready(tr.y)
+    wall = time.perf_counter() - t0
+    return res.total_events / wall
+
+
+def run(paper_scale: bool = False):
+    sizes = (16, 64, 128) if paper_scale else (16, 64)
+    events = EVENTS * (2 if paper_scale else 1)
+    results = []
+    for n in sizes:
+        per_event = _events_per_sec("per_event", n, events)
+        scan = _events_per_sec("scan", n, events)
+        results.append({
+            "n": n, "alg": ALG, "events": events, "block_size": BLOCK_SIZE,
+            "per_event_eps": per_event, "scan_eps": scan,
+            "speedup": scan / per_event,
+        })
+        yield csv_row(f"event_stream_per_event_n{n}", 1e6 / per_event,
+                      f"{per_event:.0f} events/s")
+        yield csv_row(f"event_stream_scan_n{n}", 1e6 / scan,
+                      f"{scan:.0f} events/s ({scan / per_event:.1f}x)")
+    payload = {
+        "bench": "event_stream",
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "results": results,
+    }
+    with open(os.path.abspath(_JSON_PATH), "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+
+
+def main():
+    print("name,us_per_call,derived")
+    for row in run():
+        print(row)
+    print(f"# wrote {os.path.abspath(_JSON_PATH)}")
+
+
+if __name__ == "__main__":
+    main()

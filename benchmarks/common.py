@@ -54,7 +54,7 @@ def mlp2nn_init(d_in=64, d_h=256, n_cls=10):
 
 def make_classification_trainer(alg: str, n: int, *, straggler_prob=0.1,
                                 slowdown=10.0, seed=0, partition="label_shard",
-                                eta0=0.2) -> DecentralizedTrainer:
+                                eta0=0.2, **trainer_kw) -> DecentralizedTrainer:
     data = ClassificationData(n_workers=n, d=64, partition=partition,
                               samples_per_worker=256, seed=0)
     g = topology.erdos_renyi(n, max(0.15, 4.0 / n), seed=1)
@@ -65,7 +65,7 @@ def make_classification_trainer(alg: str, n: int, *, straggler_prob=0.1,
         sched, mlp2nn_loss, mlp2nn_init(),
         lambda w, s: data.batch(w, s, batch_size=32),
         data.eval_batch(1024), eval_fn=mlp2nn_eval,
-        eta0=eta0, eta_decay=0.999, seed=seed)
+        eta0=eta0, eta_decay=0.999, seed=seed, **trainer_kw)
 
 
 def make_charlm_trainer(alg: str, n: int, *, straggler_prob=0.1,

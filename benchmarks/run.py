@@ -11,7 +11,7 @@ import sys
 import time
 
 MODULES = ("convergence", "walltime", "speedup", "communication",
-           "ablation", "kernels", "roofline")
+           "ablation", "kernels", "roofline", "event_stream")
 
 
 def main() -> int:

@@ -1,14 +1,29 @@
 """DSGD-AAU parameter updates in JAX.
 
-Two execution modes share the same math (eq. 5, ``W(k) = [W(k−1) − ηG] P(k)``):
+Three execution modes share the same math (eq. 5, ``W(k) = [W(k−1) − ηG] P(k)``):
 
-1. **Stacked simulator** (`masked_gossip_step`): all N workers' parameters live
-   in one pytree with a leading worker axis.  Used by the convergence /
-   speedup / ablation experiments that validate the paper's claims, and by the
-   small-scale tests.  The mixing contraction optionally runs through the
-   Pallas ``gossip_mix`` kernel.
+1. **Per-event simulator** (`masked_gossip_step` / `build_event_step`): all N
+   workers' parameters live in one pytree with a leading worker axis; one
+   jitted dispatch advances one ScheduleEvent.  Kept as the reference path
+   (the scan path is equivalence-tested against it).  The mixing contraction
+   optionally runs through the Pallas ``gossip_mix`` kernels — with
+   ``use_kernel`` the whole event (gradient step + mixing) is the single
+   fused ``masked_gossip_mix`` kernel call.
 
-2. **Sharded production gossip** (`ring_gossip`, `graph_gossip`): inside
+2. **Block-compiled simulator** (`masked_gossip_scan` / `build_event_scan`):
+   an entire :class:`~repro.core.scheduler.EventBatch` — stacked
+   ``(E, n, n)`` consensus matrices, ``(E, n)`` masks, ``(E,)`` step sizes —
+   advances ``(W, S, y)`` inside one ``jax.lax.scan``, i.e. one XLA dispatch
+   per E events instead of E dispatches.  Per-worker batch refresh happens
+   *on device*: each worker owns a pre-drawn sample pool (leading axes
+   ``(n, pool)``) indexed by a restart counter ``ptr`` that the scan carries
+   and bumps wherever ``restart_workers`` fires, eliminating the host
+   round-trip the legacy runner paid per event.  ``ptr`` wraps modulo the
+   pool size, so runs longer than the pool revisit samples cyclically —
+   size the pool to the expected restart count for exact per-event
+   equivalence.
+
+3. **Sharded production gossip** (`ring_gossip`, `graph_gossip`): inside
    ``shard_map`` over the mesh ``data``/worker axis, neighbor exchange is one
    ``jax.lax.ppermute`` per edge-direction — the TPU-native analogue of the
    paper's MPI peer-to-peer sends, touching only ICI neighbor links instead of
@@ -65,8 +80,17 @@ def masked_gossip_step(
         return mask.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
 
     gm = grad_mask
-    Wg = jax.tree.map(lambda w, g: w - eta * expand(gm, w) * g, W, grads)
-    Wn = gossip_mix_dense(Wg, P, use_kernel=use_kernel)
+    if use_kernel:
+        # Fused Pallas path: Pᵀ·(W − η·mask⊙G) in one kernel per leaf.
+        from repro.kernels.gossip_mix import ops as gossip_ops
+        scaled = eta * gm.astype(jnp.float32)
+        Wn = jax.tree.map(
+            lambda w, g: gossip_ops.masked_gossip_mix(
+                w, g, P.astype(w.dtype), scaled.astype(w.dtype)),
+            W, grads)
+    else:
+        Wg = jax.tree.map(lambda w, g: w - eta * expand(gm, w) * g, W, grads)
+        Wn = gossip_mix_dense(Wg, P, use_kernel=False)
     yn = jnp.einsum("n,nj->j", y, P.astype(y.dtype))
     rm = restart_mask
     Sn = jax.tree.map(lambda s, w: jnp.where(expand(rm, w) > 0, w, s), S, Wn)
@@ -153,3 +177,81 @@ def build_event_step(loss_fn: Callable, use_kernel: bool = False):
             W, S, y, grads, P, grad_mask, restart_mask, eta, use_kernel=use_kernel)
 
     return step
+
+
+# ---------------------------------------------------------------------------
+# Block-compiled path: one lax.scan over a whole EventBatch
+# ---------------------------------------------------------------------------
+
+def select_pool_batch(pools: Pytree, ptr: jax.Array) -> Pytree:
+    """Each worker's current batch from its pre-drawn sample pool.
+
+    ``pools`` leaves have shape (n, pool, ...); worker i's batch is
+    ``pool[i, ptr[i] mod pool]`` — the on-device replacement for the legacy
+    runner's host-side ``_refresh_batches``.
+    """
+    def sel(pool):
+        idx = ptr % pool.shape[1]
+        pick = jax.vmap(
+            lambda row, p: jax.lax.dynamic_index_in_dim(
+                row, p, axis=0, keepdims=False))
+        return pick(pool, idx)
+    return jax.tree.map(sel, pools)
+
+
+def masked_gossip_scan(
+    W: Pytree,
+    S: Pytree,
+    y: jax.Array,
+    ptr: jax.Array,
+    pools: Pytree,
+    grad_fn: Callable,
+    P_seq: jax.Array,
+    grad_masks: jax.Array,
+    restart_masks: jax.Array,
+    etas: jax.Array,
+    use_kernel: bool = False,
+) -> Tuple[Pytree, Pytree, jax.Array, jax.Array]:
+    """Advance (W, S, y) through a whole EventBatch in one ``lax.scan``.
+
+    P_seq: (E, n, n); grad_masks/restart_masks: (E, n); etas: (E,).
+    ptr: (n,) int32 restart counters indexing each worker's sample pool;
+    incremented wherever ``restart_masks`` fires (a restarted worker starts
+    its next local computation on a fresh batch).  Identity-padded no-op
+    events (P=I, masks all-False — see EventBatch.pad_to) leave the carry
+    bit-exact, so fixed-size blocks are safe.
+
+    Returns the updated ``(W, S, y, ptr)``.
+    """
+    def body(carry, ev):
+        W, S, y, ptr = carry
+        P, gm, rm, eta = ev
+        batches = select_pool_batch(pools, ptr)
+        grads = jax.vmap(grad_fn)(S, batches)
+        W, S, y = masked_gossip_step(
+            W, S, y, grads, P, gm, rm, eta, use_kernel=use_kernel)
+        ptr = ptr + rm.astype(ptr.dtype)
+        return (W, S, y, ptr), None
+
+    carry, _ = jax.lax.scan(
+        body, (W, S, y, ptr), (P_seq, grad_masks, restart_masks, etas))
+    return carry
+
+
+def build_event_scan(loss_fn: Callable, use_kernel: bool = False):
+    """Returns jit(block)(W, S, y, ptr, pools, P_seq, gm_seq, rm_seq, etas).
+
+    One compiled call advances the stacked state through E events — the
+    block-compiled execution model (module docstring, mode 2).  Block length
+    and pool size are baked into the trace, so keep them fixed across calls
+    (the runner pads truncated blocks with no-op events).
+    """
+    grad_fn = jax.grad(loss_fn)
+
+    @jax.jit
+    def block(W, S, y, ptr, pools, P_seq, grad_masks, restart_masks, etas):
+        return masked_gossip_scan(
+            W, S, y, ptr, pools, grad_fn, P_seq, grad_masks, restart_masks,
+            etas, use_kernel=use_kernel)
+
+    return block

@@ -5,6 +5,12 @@ stream as DSGD-AAU, so the *identical* JAX update (core/aau.py) runs all
 algorithms — only the (N(k), P(k)) sequence differs.  This mirrors the paper's
 framing where every algorithm is an instance of eq. (5) with a different
 consensus-matrix process.
+
+The compiled scan path packs these streams into EventBatches like any
+other scheduler's; per-scheduler ``edge_bound`` overrides keep the
+EventBatch compact-edge arrays at their true width (AD-PSGD/AGP touch one
+edge per event, Prague at most one group's clique) instead of the full
+graph's.
 """
 from __future__ import annotations
 
@@ -39,6 +45,9 @@ class ADPSGDScheduler(Scheduler):
         super().__init__(graph, straggler)
         self._rng = np.random.default_rng(seed)
         self.avg_time = avg_time * straggler.base_time
+
+    def edge_bound(self) -> int:
+        return 1  # one pairwise averaging per event
 
     def events(self) -> Iterator[ScheduleEvent]:
         n = self.n
@@ -89,6 +98,10 @@ class PragueScheduler(Scheduler):
         super().__init__(graph, straggler)
         self.group_size = max(2, min(group_size, graph.n))
         self._rng = np.random.default_rng(seed)
+
+    def edge_bound(self) -> int:
+        g = self.group_size
+        return g * (g - 1) // 2  # one group clique per event
 
     def events(self) -> Iterator[ScheduleEvent]:
         n = self.n
@@ -160,6 +173,9 @@ class AGPScheduler(Scheduler):
     def __init__(self, graph: Graph, straggler: StragglerModel, seed: int = 3):
         super().__init__(graph, straggler)
         self._rng = np.random.default_rng(seed)
+
+    def edge_bound(self) -> int:
+        return 1  # one directed push per event
 
     def events(self) -> Iterator[ScheduleEvent]:
         n = self.n

@@ -1,22 +1,45 @@
 """Decentralized training driver: any scheduler × any model × any data.
 
-Consumes a scheduler's event stream and advances the stacked worker state with
-the jitted update from core/aau.py.  Records loss / accuracy versus both the
-iteration counter and the *virtual wall-clock*, plus cumulative communication,
-reproducing the paper's Figures 3–5 measurement protocol.
+Consumes a scheduler's event stream and advances the stacked worker state
+with the updates from core/aau.py.  Records loss / accuracy versus both the
+iteration counter and the *virtual wall-clock*, plus cumulative
+communication, reproducing the paper's Figures 3–5 measurement protocol.
+
+Execution model — block-compiled by default (``mode="scan"``):
+
+- The event stream is packed ``block_size`` events at a time into
+  :class:`~repro.core.scheduler.EventBatch` stacked arrays and replayed on
+  device through one compiled ``lax.scan`` call per block
+  (``masked_gossip_scan``) — one XLA dispatch and zero host round-trips per
+  E events, instead of the legacy one-dispatch-per-event interpreter.
+- Per-worker batches come from a pre-drawn on-device sample pool indexed by
+  a restart counter the scan carries.  By default the pool is sized from the
+  first run's ``max_events`` bound (capped at 1024), which guarantees exact
+  per-event sampling semantics; pass ``batch_pool`` to fix the size
+  explicitly.  The pointer wraps modulo the pool, so runs with more restarts
+  per worker than the pool revisit samples cyclically — a warning is issued
+  once if that happens.
+- Evaluation stays on device and fires every ``eval_every`` events; block
+  boundaries are snapped to the eval grid and truncated blocks are padded
+  with identity no-op events, so a single compiled program serves the whole
+  run and the recorded history matches the per-event path point-for-point.
+
+The legacy interpreter is kept behind ``mode="per_event"`` for equivalence
+testing (tests/test_event_stream.py) and as the reference semantics.
 """
 from __future__ import annotations
 
 import dataclasses
-import itertools
+import warnings
 from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.aau import build_event_step, debiased_average
-from repro.core.scheduler import Scheduler
+from repro.core.aau import (build_event_scan, build_event_step,
+                            debiased_average)
+from repro.core.scheduler import EventBatch, Scheduler
 from repro.utils.tree import tree_size, tree_stack
 
 
@@ -74,7 +97,14 @@ class DecentralizedTrainer:
         seed: int = 0,
         use_kernel: bool = False,
         same_init: bool = True,
+        mode: str = "scan",                 # "scan" (block-compiled) | "per_event" (legacy)
+        block_size: int = 32,               # events per compiled scan call
+        batch_pool: Optional[int] = None,   # pre-drawn samples per worker
+                                            # (scan mode; None = auto from the
+                                            # first run's max_events, cap 1024)
     ):
+        if mode not in ("scan", "per_event"):
+            raise ValueError(f"mode must be 'scan' or 'per_event', got {mode!r}")
         self.scheduler = scheduler
         self.n = scheduler.n
         self.loss_fn = loss_fn
@@ -82,6 +112,10 @@ class DecentralizedTrainer:
         self.worker_batch_fn = worker_batch_fn
         self.eval_batch = eval_batch
         self.eta0, self.eta_decay, self.eta_decay_every = eta0, eta_decay, eta_decay_every
+        self.use_kernel = use_kernel
+        self.mode = mode
+        self.block_size = max(1, block_size)
+        self.batch_pool = batch_pool if batch_pool is None else max(1, batch_pool)
         rng = jax.random.PRNGKey(seed)
         if same_init:
             p0 = init_params_fn(rng)
@@ -92,11 +126,20 @@ class DecentralizedTrainer:
         self.S = self.W
         self.y = jnp.ones((self.n,), dtype=jnp.float32)
         self.param_count = tree_size(params[0])
-        self._step = build_event_step(loss_fn, use_kernel=use_kernel)
         self._eval = jax.jit(self.eval_fn)
+        # Per-mode state built lazily on first use (avoids tracing both paths).
+        self._step = None           # per-event jitted update
+        self._batches = None        # per-event current batch stack
         self._draw_count = np.zeros(self.n, dtype=np.int64)
-        self._batches = tree_stack(
-            [self._draw(i) for i in range(self.n)])
+        self._scan = None           # block-compiled jitted update
+        self._pools = None          # (n, batch_pool, ...) on-device sample pools
+        self._ptr = None            # (n,) int32 restart counters
+
+    # -- legacy per-event state -------------------------------------------
+    def _ensure_per_event(self):
+        if self._step is None:
+            self._step = build_event_step(self.loss_fn, use_kernel=self.use_kernel)
+            self._batches = tree_stack([self._draw(i) for i in range(self.n)])
 
     def _draw(self, worker: int):
         b = self.worker_batch_fn(worker, int(self._draw_count[worker]))
@@ -121,6 +164,75 @@ class DecentralizedTrainer:
             new_leaves.append(upd(leaf, lambda b, li=li: jax.tree.leaves(b)[li]))
         self._batches = jax.tree.unflatten(treedef, new_leaves)
 
+    # -- scan-mode state ---------------------------------------------------
+    def _ensure_scan(self, max_events: Optional[int] = None):
+        if self._scan is None:
+            self._scan = build_event_scan(self.loss_fn, use_kernel=self.use_kernel)
+            # Restarts per worker are bounded by total events, so a pool of
+            # max_events draws never wraps; explicit batch_pool overrides.
+            if self.batch_pool is not None:
+                pool_len = self.batch_pool
+            else:
+                pool_len = min(max_events, 1024) if max_events else 64
+            self._pool_len = pool_len
+            # pool[i, s] = the s-th batch worker i would draw — identical to
+            # the legacy path's draw sequence, moved on-device ahead of time.
+            self._pools = tree_stack([
+                tree_stack([self.worker_batch_fn(w, s)
+                            for s in range(pool_len)])
+                for w in range(self.n)])
+            self._ptr = jnp.zeros((self.n,), dtype=jnp.int32)
+
+    def _dispatch_block(self, batch: EventBatch, rounds: int,
+                        target: Optional[int] = None) -> None:
+        """One compiled call: pad to the block shape, advance (W, S, y, ptr)."""
+        E = batch.E
+        if target is None:
+            target = self.block_size
+        if E < target:
+            batch = batch.pad_to(target)
+        etas = self.eta0 * self.eta_decay ** (
+            (rounds + np.arange(batch.E)) // self.eta_decay_every)
+        if E < batch.E:
+            etas[E:] = 0.0  # padded no-op events (masks are already all-False)
+        self.W, self.S, self.y, self._ptr = self._scan(
+            self.W, self.S, self.y, self._ptr, self._pools,
+            jnp.asarray(batch.P, dtype=jnp.float32),
+            jnp.asarray(batch.grad_workers),
+            jnp.asarray(batch.restart_workers),
+            jnp.asarray(etas, dtype=jnp.float32),
+        )
+
+    def warmup(self) -> None:
+        """Compile this trainer's update and eval with no-op dispatches.
+
+        State is left exactly unchanged (identity P, all-False masks — η is
+        traced data, so its warmup values don't matter), letting benchmarks
+        separate compile time from steady-state throughput.  In scan mode
+        the compiled block shape is ``block_size``; a subsequent run whose
+        ``eval_every`` is smaller re-traces once at the smaller shape.
+        """
+        n = self.n
+        noop = EventBatch.from_events(
+            [_identity_event(n)], edge_bound=1).pad_to(
+                self.block_size if self.mode == "scan" else 1)
+        if self.mode == "scan":
+            self._ensure_scan()
+            self._dispatch_block(noop, rounds=0)
+            self.y.block_until_ready()
+        else:
+            self._ensure_per_event()
+            ev = noop.to_events()[0]
+            self.W, self.S, self.y = self._step(
+                self.W, self.S, self.y, self._batches,
+                jnp.asarray(ev.P, dtype=jnp.float32),
+                jnp.asarray(ev.grad_workers), jnp.asarray(ev.restart_workers),
+                jnp.float32(0.0),
+            )
+            self.y.block_until_ready()
+        self._eval_now()
+
+    # -- driving loop ------------------------------------------------------
     def run(
         self,
         max_events: Optional[int] = None,
@@ -128,6 +240,12 @@ class DecentralizedTrainer:
         eval_every: int = 10,
     ) -> RunResult:
         assert max_events or max_time, "bound the run by events or virtual time"
+        if self.mode == "scan":
+            return self._run_scan(max_events, max_time, eval_every)
+        return self._run_per_event(max_events, max_time, eval_every)
+
+    def _run_per_event(self, max_events, max_time, eval_every) -> RunResult:
+        self._ensure_per_event()
         history: List[HistoryPoint] = []
         comm = 0
         active_sizes: List[int] = []
@@ -159,6 +277,65 @@ class DecentralizedTrainer:
                     comm_param_copies=comm,
                     n_active_mean=float(np.mean(active_sizes[-eval_every:])),
                 ))
+        return self._finish(history, k, t, comm, rounds, active_sizes)
+
+    def _run_scan(self, max_events, max_time, eval_every) -> RunResult:
+        self._ensure_scan(max_events)
+        bound = self.scheduler.edge_bound()
+        # With eval_every < block_size every chunk is exactly eval_every
+        # events, so padding to this target (not block_size) wastes nothing
+        # while still compiling a single block shape for the whole run.
+        target = min(self.block_size, eval_every)
+        history: List[HistoryPoint] = []
+        comm = 0
+        active_sizes: List[int] = []
+        t = 0.0
+        k = -1
+        rounds = 0
+        buf = []
+        stream = self.scheduler.events()
+        exhausted = False
+        while not exhausted:
+            try:
+                ev = next(stream)
+            except StopIteration:  # finite custom stream: flush what we have
+                ev = None
+            if (ev is None
+                    or (max_events is not None and ev.k >= max_events)
+                    or (max_time is not None and ev.time > max_time)):
+                exhausted = True
+            else:
+                buf.append(ev)
+                k, t = ev.k, ev.time
+                comm += ev.param_copies_sent
+                active_sizes.append(ev.n_active)
+            # Snap block boundaries to the eval grid so the history matches
+            # the per-event path point-for-point.
+            until_eval = eval_every - rounds % eval_every
+            flush = len(buf) >= min(target, until_eval) or (
+                exhausted and buf)
+            if not flush:
+                continue
+            self._dispatch_block(
+                EventBatch.from_events(buf, edge_bound=bound), rounds, target)
+            rounds += len(buf)
+            buf = []
+            if rounds % eval_every == 0:
+                loss, metric = self._eval_now()
+                history.append(HistoryPoint(
+                    k=k, time=t, loss=loss, metric=metric,
+                    comm_param_copies=comm,
+                    n_active_mean=float(np.mean(active_sizes[-eval_every:])),
+                ))
+        if rounds and int(jnp.max(self._ptr)) > self._pool_len:
+            warnings.warn(
+                f"batch pool of {self._pool_len} draws/worker wrapped "
+                f"(max restarts {int(jnp.max(self._ptr))}): samples were "
+                "revisited cyclically; raise batch_pool (or bound the run "
+                "by max_events) for exact per-event sampling semantics.")
+        return self._finish(history, k, t, comm, rounds, active_sizes)
+
+    def _finish(self, history, k, t, comm, rounds, active_sizes) -> RunResult:
         loss, metric = self._eval_now()
         history.append(HistoryPoint(
             k=k, time=t, loss=loss, metric=metric, comm_param_copies=comm,
@@ -174,6 +351,15 @@ class DecentralizedTrainer:
         avg = debiased_average(self.W, self.y)
         loss, metric = self._eval(avg, self.eval_batch)
         return float(loss), float(metric)
+
+
+def _identity_event(n: int):
+    from repro.core.scheduler import ScheduleEvent
+    return ScheduleEvent(
+        k=0, time=0.0,
+        grad_workers=np.zeros(n, dtype=bool),
+        restart_workers=np.zeros(n, dtype=bool),
+        P=np.eye(n, dtype=np.float32), active_edges=(), param_copies_sent=0)
 
 
 def run_algorithms(

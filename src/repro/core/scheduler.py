@@ -13,6 +13,14 @@ The *ordering* of events — not their wall-clock overlap — determines every
 worker's view of its neighbors' parameters, so parameter trajectories are
 faithful to a real asynchronous cluster under the same straggler draws.
 
+Events are consumed either one at a time (:meth:`Scheduler.events`, the
+legacy interpreted path) or packed into :class:`EventBatch` stacked arrays
+that replay inside a single compiled ``lax.scan`` — the representation
+that makes paper-scale N=128/256 streams affordable.  The runner packs
+blocks itself via :meth:`EventBatch.from_events` (its chunking snaps to
+the eval grid and the run bounds); :meth:`Scheduler.event_batches` is the
+standalone fixed-size packing API for benchmarks and diagnostics.
+
 Staleness semantics: a worker's gradient is evaluated at the parameter
 *snapshot it held when it started computing* (``restart_workers`` marks where
 snapshots refresh).  For DSGD-AAU and synchronous DSGD the snapshot always
@@ -52,6 +60,117 @@ class ScheduleEvent:
         return int(self.grad_workers.sum())
 
 
+@dataclasses.dataclass(frozen=True)
+class EventBatch:
+    """``E`` consecutive ScheduleEvents packed into stacked arrays.
+
+    This is the *compiled* representation of the event stream: the runner
+    converts one EventBatch into device arrays and advances the whole block
+    inside a single ``jax.lax.scan`` (core/aau.py ``masked_gossip_scan``),
+    instead of dispatching one jitted step per event from Python.  The dense
+    ``P`` stack feeds the update; ``edges``/``n_edges`` are the compact
+    active-edge form — fixed width per scheduler (``Scheduler.edge_bound``),
+    ``-1``-padded — kept for diagnostics and as the seed of a future
+    sparse-P kernel (most baselines touch 1 edge out of O(n²) entries).
+    """
+    k0: int                         # iteration counter of the first event
+    times: np.ndarray               # (E,) float64 virtual completion clocks
+    P: np.ndarray                   # (E, n, n) float32 consensus matrices
+    grad_workers: np.ndarray        # (E, n) bool
+    restart_workers: np.ndarray     # (E, n) bool
+    param_copies_sent: np.ndarray   # (E,) int64
+    edges: np.ndarray               # (E, edge_bound, 2) int32, -1-padded
+    n_edges: np.ndarray             # (E,) int32 valid rows of ``edges``
+
+    @property
+    def E(self) -> int:
+        return len(self.times)
+
+    @property
+    def n(self) -> int:
+        return self.P.shape[1]
+
+    @property
+    def n_active(self) -> np.ndarray:
+        return self.grad_workers.sum(axis=1)
+
+    @classmethod
+    def from_events(cls, events: Sequence[ScheduleEvent],
+                    edge_bound: Optional[int] = None) -> "EventBatch":
+        if not events:
+            raise ValueError("cannot pack an empty event block")
+        n = events[0].P.shape[0]
+        width = edge_bound if edge_bound is not None else max(
+            1, max(len(ev.active_edges) for ev in events))
+        edges = np.full((len(events), width, 2), -1, dtype=np.int32)
+        n_edges = np.zeros(len(events), dtype=np.int32)
+        for e, ev in enumerate(events):
+            m = len(ev.active_edges)
+            if m > width:
+                raise ValueError(
+                    f"event {ev.k} has {m} active edges > edge_bound {width}")
+            if m:
+                edges[e, :m] = np.asarray(ev.active_edges, dtype=np.int32)
+            n_edges[e] = m
+        return cls(
+            k0=events[0].k,
+            times=np.asarray([ev.time for ev in events], dtype=np.float64),
+            P=np.stack([ev.P for ev in events]).astype(np.float32),
+            grad_workers=np.stack([ev.grad_workers for ev in events]),
+            restart_workers=np.stack([ev.restart_workers for ev in events]),
+            param_copies_sent=np.asarray(
+                [ev.param_copies_sent for ev in events], dtype=np.int64),
+            edges=edges, n_edges=n_edges,
+        )
+
+    def pad_to(self, E: int) -> "EventBatch":
+        """Pad with identity no-op events (P=I, empty masks) up to length E.
+
+        A no-op event leaves ``(W, S, y)`` and the batch-pool pointers exactly
+        unchanged, so the runner can always dispatch fixed-size blocks (one
+        compiled program) even when an eval boundary or the end of the run
+        truncates a block.
+        """
+        pad = E - self.E
+        if pad < 0:
+            raise ValueError(f"cannot pad E={self.E} down to {E}")
+        if pad == 0:
+            return self
+        n = self.n
+        eyeP = np.broadcast_to(np.eye(n, dtype=np.float32), (pad, n, n))
+        off = np.zeros((pad, n), dtype=bool)
+        return dataclasses.replace(
+            self,
+            times=np.concatenate(
+                [self.times, np.full(pad, self.times[-1])]),
+            P=np.concatenate([self.P, eyeP]),
+            grad_workers=np.concatenate([self.grad_workers, off]),
+            restart_workers=np.concatenate([self.restart_workers, off]),
+            param_copies_sent=np.concatenate(
+                [self.param_copies_sent, np.zeros(pad, dtype=np.int64)]),
+            edges=np.concatenate([
+                self.edges,
+                np.full((pad,) + self.edges.shape[1:], -1, dtype=np.int32)]),
+            n_edges=np.concatenate(
+                [self.n_edges, np.zeros(pad, dtype=np.int32)]),
+        )
+
+    def to_events(self) -> List[ScheduleEvent]:
+        """Unpack back into per-event form (round-trip/diagnostic helper)."""
+        out = []
+        for e in range(self.E):
+            m = int(self.n_edges[e])
+            out.append(ScheduleEvent(
+                k=self.k0 + e, time=float(self.times[e]),
+                grad_workers=self.grad_workers[e],
+                restart_workers=self.restart_workers[e],
+                P=self.P[e],
+                active_edges=tuple(map(tuple, self.edges[e, :m])),
+                param_copies_sent=int(self.param_copies_sent[e]),
+            ))
+        return out
+
+
 class Scheduler:
     """Base: iterate ScheduleEvents forever (caller bounds by count/time)."""
 
@@ -66,6 +185,33 @@ class Scheduler:
 
     def events(self) -> Iterator[ScheduleEvent]:
         raise NotImplementedError
+
+    def edge_bound(self) -> int:
+        """Max #active edges any single event of this scheduler can carry.
+
+        Fixed per scheduler so every EventBatch has the same compact-edge
+        width (stable shapes ⇒ no recompilation across blocks).  Subclasses
+        with tighter structure (pairwise gossip, bounded groups) override.
+        """
+        return max(1, len(self.graph.edges))
+
+    def event_batches(self, block_size: int) -> Iterator[EventBatch]:
+        """Pack consecutive events into EventBatches of ``block_size``.
+
+        A finite event stream ends with one trailing partial batch (the
+        built-in schedulers stream forever, but subclasses may not).
+        """
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        bound = self.edge_bound()
+        buf: List[ScheduleEvent] = []
+        for ev in self.events():
+            buf.append(ev)
+            if len(buf) == block_size:
+                yield EventBatch.from_events(buf, edge_bound=bound)
+                buf = []
+        if buf:
+            yield EventBatch.from_events(buf, edge_bound=bound)
 
     # -- shared helpers ---------------------------------------------------
     def _mask(self, workers) -> np.ndarray:

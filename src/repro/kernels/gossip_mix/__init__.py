@@ -1,4 +1,8 @@
 from repro.kernels.gossip_mix import ops, ref
-from repro.kernels.gossip_mix.kernel import gossip_mix_pallas
-from repro.kernels.gossip_mix.ops import gossip_mix
-from repro.kernels.gossip_mix.ref import gossip_mix_ref
+from repro.kernels.gossip_mix.kernel import (gossip_mix_batched_pallas,
+                                             gossip_mix_pallas,
+                                             masked_gossip_pallas)
+from repro.kernels.gossip_mix.ops import (gossip_mix, gossip_mix_batched,
+                                          masked_gossip_mix)
+from repro.kernels.gossip_mix.ref import (gossip_mix_batched_ref,
+                                          gossip_mix_ref, masked_gossip_ref)

@@ -1,8 +1,11 @@
-"""Jitted wrapper for gossip_mix: shape guards, padding, CPU interpret fallback.
+"""Jitted wrappers for the gossip_mix kernels: shape guards, padding, CPU
+interpret fallback.
 
 Handles arbitrary leaf shapes by flattening to (N, D), padding D up to the
 lane-aligned tile and N up to the sublane boundary (padding P with identity
-rows so padded workers mix with nobody).
+rows so padded workers mix with nobody).  ``masked_gossip_mix`` additionally
+folds the per-event learning-rate/gradient mask into a second resident matrix
+Q = diag(η·mask)·P so the scan body's whole event update is one kernel call.
 """
 from __future__ import annotations
 
@@ -12,13 +15,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.gossip_mix.kernel import gossip_mix_pallas
+from repro.kernels.gossip_mix.kernel import (gossip_mix_batched_pallas,
+                                             gossip_mix_pallas,
+                                             masked_gossip_pallas)
 
 _SUBLANE = 8
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _pad_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _pad_P_identity(P: jax.Array, N: int, Np: int) -> jax.Array:
+    """Pad P to (Np, Np) with identity rows: padded workers mix with nobody."""
+    P = jnp.pad(P, ((0, Np - N), (0, Np - N)))
+    return P.at[jnp.arange(N, Np), jnp.arange(N, Np)].set(1.0)
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
@@ -31,14 +46,69 @@ def gossip_mix(W: jax.Array, P: jax.Array, *, block_d: int = 512,
     orig_shape = W.shape
     flat = W.reshape(N, -1)
     D = flat.shape[1]
-    Dp = -(-D // block_d) * block_d
-    Np = -(-N // _SUBLANE) * _SUBLANE
+    Dp = _pad_up(D, block_d)
+    Np = _pad_up(N, _SUBLANE)
     if Dp != D:
         flat = jnp.pad(flat, ((0, 0), (0, Dp - D)))
     if Np != N:
         flat = jnp.pad(flat, ((0, Np - N), (0, 0)))
-        P = jnp.pad(P, ((0, Np - N), (0, Np - N)))
-        P = P.at[jnp.arange(N, Np), jnp.arange(N, Np)].set(1.0)
+        P = _pad_P_identity(P, N, Np)
     out = gossip_mix_pallas(flat, P.astype(flat.dtype), block_d=block_d,
                             interpret=interpret)
     return out[:N, :D].reshape(orig_shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def masked_gossip_mix(W: jax.Array, G: jax.Array, P: jax.Array,
+                      scaled_mask: jax.Array, *, block_d: int = 512,
+                      interpret: bool | None = None) -> jax.Array:
+    """Fused event update: out = Pᵀ·(W − diag(scaled_mask)·G), any (N, ...) W.
+
+    ``scaled_mask`` is η·grad_mask (length N); padded workers get zero mask
+    and identity mixing, so padding never leaks into real rows.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    N = W.shape[0]
+    orig_shape = W.shape
+    flat_w = W.reshape(N, -1)
+    flat_g = G.reshape(N, -1).astype(flat_w.dtype)
+    D = flat_w.shape[1]
+    Dp = _pad_up(D, block_d)
+    Np = _pad_up(N, _SUBLANE)
+    if Dp != D:
+        flat_w = jnp.pad(flat_w, ((0, 0), (0, Dp - D)))
+        flat_g = jnp.pad(flat_g, ((0, 0), (0, Dp - D)))
+    if Np != N:
+        flat_w = jnp.pad(flat_w, ((0, Np - N), (0, 0)))
+        flat_g = jnp.pad(flat_g, ((0, Np - N), (0, 0)))
+        P = _pad_P_identity(P, N, Np)
+        scaled_mask = jnp.pad(scaled_mask, (0, Np - N))
+    P = P.astype(flat_w.dtype)
+    Q = scaled_mask.astype(flat_w.dtype)[:, None] * P
+    out = masked_gossip_pallas(flat_w, flat_g, P, Q, block_d=block_d,
+                               interpret=interpret)
+    return out[:N, :D].reshape(orig_shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def gossip_mix_batched(W: jax.Array, P: jax.Array, *, block_d: int = 512,
+                       interpret: bool | None = None) -> jax.Array:
+    """Stacked mixing problems: out[e] = P[e]ᵀ·W[e] for W of shape (E, N, ...)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    E, N = W.shape[:2]
+    orig_shape = W.shape
+    flat = W.reshape(E, N, -1)
+    D = flat.shape[2]
+    Dp = _pad_up(D, block_d)
+    Np = _pad_up(N, _SUBLANE)
+    if Dp != D:
+        flat = jnp.pad(flat, ((0, 0), (0, 0), (0, Dp - D)))
+    if Np != N:
+        flat = jnp.pad(flat, ((0, 0), (0, Np - N), (0, 0)))
+        P = jnp.pad(P, ((0, 0), (0, Np - N), (0, Np - N)))
+        P = P.at[:, jnp.arange(N, Np), jnp.arange(N, Np)].set(1.0)
+    out = gossip_mix_batched_pallas(flat, P.astype(flat.dtype),
+                                    block_d=block_d, interpret=interpret)
+    return out[:, :N, :D].reshape(orig_shape)

@@ -1,9 +1,24 @@
-"""Pure-jnp oracle for the gossip_mix kernel."""
-import jax.numpy as jnp
+"""Pure-jnp oracles for the gossip_mix kernels."""
 import jax
+import jax.numpy as jnp
 
 
 def gossip_mix_ref(W: jax.Array, P: jax.Array) -> jax.Array:
     """out[j, d] = Σ_i P[i, j] · W[i, d]  ==  Pᵀ @ W."""
     return jnp.einsum("nd,nj->jd", W.astype(jnp.float32),
+                      P.astype(jnp.float32)).astype(W.dtype)
+
+
+def masked_gossip_ref(W: jax.Array, G: jax.Array, P: jax.Array,
+                      scaled_mask: jax.Array) -> jax.Array:
+    """out = Pᵀ · (W − diag(scaled_mask) · G) with scaled_mask = η·grad_mask."""
+    stepped = W.astype(jnp.float32) - (
+        scaled_mask.astype(jnp.float32)[:, None] * G.astype(jnp.float32))
+    return jnp.einsum("nd,nj->jd", stepped,
+                      P.astype(jnp.float32)).astype(W.dtype)
+
+
+def gossip_mix_batched_ref(W: jax.Array, P: jax.Array) -> jax.Array:
+    """out[e] = P[e]ᵀ @ W[e] for stacked (E, N, D) problems."""
+    return jnp.einsum("end,enj->ejd", W.astype(jnp.float32),
                       P.astype(jnp.float32)).astype(W.dtype)

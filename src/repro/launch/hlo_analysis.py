@@ -238,8 +238,13 @@ def _dot_flops(op: Op, symbols: Dict[str, Tuple[str, str]]) -> float:
     m = _LHS_CONTRACT_RE.search(op.line)
     if not m:
         return 2.0 * res  # degenerate
-    lhs_name = op.args.split(",")[0].strip().rstrip(")").lstrip("%")
-    lhs = symbols.get(lhs_name)
+    # The lhs operand is the first %name; older jax as_text() prefixes it
+    # with an inline type ("dot(f32[4,64]{1,0} %x, ...)") which takes
+    # priority over the symbol table.
+    nm = re.search(r"%([\w\.\-]+)", op.args)
+    lhs = None
+    if nm is not None:
+        lhs = _first_shape(op.args[:nm.start()]) or symbols.get(nm.group(1))
     if lhs is None:
         return 2.0 * res
     lhs_dims = [int(d) for d in lhs[1].split(",")] if lhs[1] else []

@@ -16,7 +16,9 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.utils.compat import auto_axis_types, make_mesh
 
 
 def main(argv=None):
@@ -50,8 +52,8 @@ def main(argv=None):
         n_dev = jax.device_count()
         model_par = 2 if n_dev % 2 == 0 and n_dev > 1 else 1
         data_par = max(1, n_dev // model_par)
-        base = jax.make_mesh((data_par, model_par), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        base = make_mesh((data_par, model_par), ("data", "model"),
+                         axis_types=auto_axis_types(2))
         workers = args.workers or data_par
         fsdp = data_par // workers
         mesh, axes = hierarchical_view(base, workers, max(1, fsdp))

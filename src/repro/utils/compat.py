@@ -1,0 +1,75 @@
+"""Version shims over jax API drift (mesh axis types, shard_map location).
+
+The repo targets recent jax, but must also run on jax 0.4.x where
+``jax.sharding.AxisType`` / the ``axis_types=`` kwarg and the top-level
+``jax.shard_map`` entry point do not exist yet.  Everything that builds a mesh
+or wraps a shard_map goes through this module so the rest of the codebase can
+be written against the modern API.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+try:  # jax >= 0.4.38
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+
+    HAS_AXIS_TYPE = True
+except ImportError:  # jax 0.4.37 and earlier: placeholder with the same names
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    HAS_AXIS_TYPE = False
+
+
+def auto_axis_types(n: int) -> Tuple[AxisType, ...]:
+    return (AxisType.Auto,) * n
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              axis_types: Optional[Sequence[AxisType]] = None,
+              devices=None) -> Mesh:
+    """``jax.make_mesh`` that tolerates jax versions without ``axis_types``."""
+    kw = {} if devices is None else {"devices": devices}
+    if HAS_AXIS_TYPE and axis_types is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=tuple(axis_types), **kw)
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+def mesh_from_devices(devices, axis_names: Sequence[str], *,
+                      axis_types: Optional[Sequence[AxisType]] = None) -> Mesh:
+    """``Mesh(devices, names)`` that tolerates jax versions without axis_types."""
+    if HAS_AXIS_TYPE and axis_types is not None:
+        try:
+            return Mesh(devices, axis_names, axis_types=tuple(axis_types))
+        except TypeError:
+            pass
+    return Mesh(devices, axis_names)
+
+
+def shard_map(f=None, /, **kw):
+    """Top-level ``jax.shard_map`` with fallback to the experimental module.
+
+    Newer jax renamed ``check_rep`` to ``check_vma``; we accept either spelling
+    and translate for whichever implementation is present.
+    """
+    impl = getattr(jax, "shard_map", None)
+    legacy = impl is None
+    if legacy:
+        from jax.experimental.shard_map import shard_map as impl  # type: ignore
+        if "check_vma" in kw:
+            kw["check_rep"] = kw.pop("check_vma")
+    elif "check_rep" in kw:
+        kw["check_vma"] = kw.pop("check_rep")
+    if f is None:
+        return lambda g: impl(g, **kw)
+    return impl(f, **kw)

@@ -12,3 +12,28 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+def hypothesis_or_stubs():
+    """(given, settings, st) — real hypothesis if installed, else stubs.
+
+    The stubs keep modules importable without hypothesis (it is a dev-only
+    dependency, see requirements-dev.txt): strategy expressions evaluate to
+    None and ``@given``-decorated tests collect as skipped, so the plain
+    pytest tests in the same module still run.
+    """
+    try:
+        from hypothesis import given, settings, strategies as st
+        return given, settings, st
+    except ImportError:
+        class _StrategyStub:
+            def __getattr__(self, name):
+                return lambda *a, **k: None
+
+        def given(*a, **k):
+            return pytest.mark.skip(reason="hypothesis not installed")
+
+        def settings(*a, **k):
+            return lambda f: f
+
+        return given, settings, _StrategyStub()

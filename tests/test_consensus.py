@@ -1,7 +1,10 @@
 """Consensus-matrix properties (paper Assumption 1 and Lemmas 1–2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import hypothesis_or_stubs
+
+given, settings, st = hypothesis_or_stubs()
 
 from repro.core import consensus, topology
 

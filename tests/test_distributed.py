@@ -77,10 +77,10 @@ class TestMeshViews:
     def test_hierarchical_view_shapes(self):
         out = run_py("""
             import jax
-            from jax.sharding import AxisType
             from repro.launch.mesh import hierarchical_view
-            base = jax.make_mesh((4, 2), ("data", "model"),
-                                 axis_types=(AxisType.Auto,) * 2)
+            from repro.utils.compat import auto_axis_types, make_mesh
+            base = make_mesh((4, 2), ("data", "model"),
+                             axis_types=auto_axis_types(2))
             v, axes = hierarchical_view(base, 2, 2)
             print(v.axis_names, v.shape["worker"], v.shape["fsdp"])
             v1, axes1 = hierarchical_view(base, 4, 1)
@@ -108,19 +108,20 @@ class TestGossipEquivalence:
         """ppermute ring gossip == dense Pᵀ·W with ring Metropolis weights."""
         out = run_py("""
             import jax, jax.numpy as jnp, numpy as np
-            from jax.sharding import Mesh, NamedSharding, PartitionSpec as P, AxisType
+            from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
             from repro.launch.mesh import TrainAxes
             from repro.launch.steps import _tree_gossip, default_gossip_weights
             from repro.core.consensus import metropolis_matrix
+            from repro.utils.compat import auto_axis_types, make_mesh, shard_map
 
             n = 4
-            mesh = jax.make_mesh((n,), ("worker",), axis_types=(AxisType.Auto,))
+            mesh = make_mesh((n,), ("worker",), axis_types=auto_axis_types(1))
             axes = TrainAxes(pod=None, worker="worker", fsdp=None, model="model")
             W = {"w": jnp.arange(n * 6, dtype=jnp.float32).reshape(n, 6)}
             spec = {"w": P("worker", None)}
             gw = default_gossip_weights(n, False)
-            f = jax.shard_map(lambda W: _tree_gossip(W, axes, n, gw),
-                              mesh=mesh, in_specs=(spec,), out_specs=spec)
+            f = shard_map(lambda W: _tree_gossip(W, axes, n, gw),
+                          mesh=mesh, in_specs=(spec,), out_specs=spec)
             out = f(W)
             Pm = metropolis_matrix(n, [(i, (i + 1) % n) for i in range(n)])
             ref = Pm.T @ np.asarray(W["w"])
@@ -133,17 +134,18 @@ class TestGossipEquivalence:
         """Pod-edge mixing preserves the mean (doubly stochastic check)."""
         out = run_py("""
             import jax, jax.numpy as jnp, numpy as np
-            from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+            from jax.sharding import NamedSharding, PartitionSpec as P
             from repro.launch.mesh import TrainAxes
             from repro.launch.steps import _tree_gossip, default_gossip_weights
-            mesh = jax.make_mesh((2, 2), ("pod", "worker"),
-                                 axis_types=(AxisType.Auto,) * 2)
+            from repro.utils.compat import auto_axis_types, make_mesh, shard_map
+            mesh = make_mesh((2, 2), ("pod", "worker"),
+                             axis_types=auto_axis_types(2))
             axes = TrainAxes(pod="pod", worker="worker", fsdp=None, model="model")
             W = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 5))}
             spec = {"w": P(("pod", "worker"), None)}
             gw = default_gossip_weights(2, True)
-            f = jax.shard_map(lambda W: _tree_gossip(W, axes, 2, gw),
-                              mesh=mesh, in_specs=(spec,), out_specs=spec)
+            f = shard_map(lambda W: _tree_gossip(W, axes, 2, gw),
+                          mesh=mesh, in_specs=(spec,), out_specs=spec)
             out = f(W)
             print("MEAN_ERR",
                   float(np.abs(np.asarray(out["w"]).mean(0)
@@ -158,14 +160,15 @@ class TestDryRunSmall:
     def test_train_and_decode_lower_on_small_mesh(self):
         out = run_py("""
             import jax, jax.numpy as jnp
-            from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+            from jax.sharding import NamedSharding, PartitionSpec as P
             from repro.configs import get_config
             from repro.launch import sharding as S, shapes as SH, steps as ST
             from repro.launch.mesh import hierarchical_view
             from repro.models.transformer import init_model
+            from repro.utils.compat import auto_axis_types, make_mesh
 
-            base = jax.make_mesh((4, 2), ("data", "model"),
-                                 axis_types=(AxisType.Auto,) * 2)
+            base = make_mesh((4, 2), ("data", "model"),
+                             axis_types=auto_axis_types(2))
             view, axes = hierarchical_view(base, 2, 2)
             cfg = get_config("qwen3-8b").reduced()
             nw = 2
@@ -217,10 +220,11 @@ class TestHloAnalysis:
         """Custom HLO cost model multiplies while bodies by trip count."""
         out = run_py("""
             import jax, jax.numpy as jnp
-            from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+            from jax.sharding import NamedSharding, PartitionSpec as P
             from repro.launch.hlo_analysis import analyze_hlo_text
-            mesh = jax.make_mesh((2, 2), ("data", "model"),
-                                 axis_types=(AxisType.Auto,) * 2)
+            from repro.utils.compat import auto_axis_types, make_mesh
+            mesh = make_mesh((2, 2), ("data", "model"),
+                             axis_types=auto_axis_types(2))
             def f(w, x):
                 def body(c, wi):
                     return jnp.tanh(c @ wi), ()

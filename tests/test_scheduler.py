@@ -3,7 +3,10 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import hypothesis_or_stubs
+
+given, settings, st = hypothesis_or_stubs()
 
 from repro.core import topology
 from repro.core.baselines import make_scheduler

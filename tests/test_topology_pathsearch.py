@@ -1,7 +1,10 @@
 """Graph constructors + Pathsearch (Algorithm 3) invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest import hypothesis_or_stubs
+
+given, settings, st = hypothesis_or_stubs()
 
 from repro.core import topology
 from repro.core.pathsearch import PathSearchState
