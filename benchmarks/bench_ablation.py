@@ -2,13 +2,17 @@
 from benchmarks.common import csv_row, make_classification_trainer
 
 
-def run(paper_scale: bool = False):
+def run(paper_scale: bool = False, smoke: bool = False):
     n = 128 if paper_scale else 16
     budget = 50.0
     rows = []
     algs = ("dsgd_aau", "ad_psgd", "prague") if not paper_scale else \
         ("dsgd_aau", "dsgd_sync", "ad_psgd", "prague", "agp")
-    for prob in (0.05, 0.1, 0.2, 0.4):
+    probs, slows = (0.05, 0.1, 0.2, 0.4), (5.0, 10.0, 20.0, 40.0)
+    if smoke:
+        n, budget = 16, 8.0
+        algs, probs, slows = ("dsgd_aau",), (0.1,), (10.0,)
+    for prob in probs:
         for alg in algs:
             res = make_classification_trainer(
                 alg, n, straggler_prob=prob).run(max_time=budget,
@@ -16,7 +20,7 @@ def run(paper_scale: bool = False):
             rows.append(csv_row(
                 f"ablation/prob{int(prob*100)}/{alg}", 0.0,
                 f"acc={res.final_metric:.4f};loss={res.final_loss:.4f}"))
-    for slow in (5.0, 10.0, 20.0, 40.0):
+    for slow in slows:
         for alg in algs:
             res = make_classification_trainer(
                 alg, n, slowdown=slow).run(max_time=budget, eval_every=10**6)

@@ -6,9 +6,11 @@ time; DSGD-AAU must achieve its speedup at no extra communication.
 from benchmarks.common import ALGS, csv_row, make_classification_trainer
 
 
-def run(paper_scale: bool = False):
+def run(paper_scale: bool = False, smoke: bool = False):
     n = 128 if paper_scale else 16
     budget = 50.0
+    if smoke:
+        n, budget = 16, 8.0
     rows = []
     for alg in ALGS:
         res = make_classification_trainer(alg, n).run(max_time=budget,

@@ -3,9 +3,11 @@ from benchmarks.common import ALGS, csv_row, make_classification_trainer, \
     make_charlm_trainer, timed_run
 
 
-def run(paper_scale: bool = False):
+def run(paper_scale: bool = False, smoke: bool = False):
     n = 128 if paper_scale else 16
     events = 600 if paper_scale else 120
+    if smoke:
+        n, events = 16, 24
     rows = []
     for alg in ALGS:
         res, wall = timed_run(make_classification_trainer(alg, n),

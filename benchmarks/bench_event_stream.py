@@ -1,21 +1,32 @@
-"""Events/sec of the legacy per-event trainer vs the block-compiled scan.
+"""Events/sec of the event-stream execution modes, at paper worker counts.
 
-The per-event path pays one XLA dispatch, one host-device sync, and one
-host-side batch refresh per ScheduleEvent; the scan path amortizes one
-dispatch over ``block_size`` events with the batch refresh on device.  The
-workload is deliberately *dispatch-bound* (a tiny 2-layer net, AD-PSGD's
-one-event-per-worker-finish stream — the longest of the paper's baselines):
-it isolates the per-event overhead that caps stream throughput at paper
-scale, which is exactly what the block-compiled path removes.
+Three consumers share one scheduler stream (AD-PSGD — the longest of the
+paper's baselines, one event per worker-finish):
 
-  python -m benchmarks.bench_event_stream          # writes BENCH_event_stream.json
+- ``per_event``: one XLA dispatch + host batch refresh per event (legacy);
+- ``scan``: block-compiled dense scan — one dispatch per ``block_size``
+  events, but every event still pays the O(n²·D) dense mix and O(n·D)
+  gradients;
+- ``sparse_scan``: the active-set gather-compute-scatter scan — O(A²·D)
+  mix and O(A·D) gradients with A=2 for AD-PSGD, the path that makes
+  N∈{128, 256} (paper Figures 3–5 worker counts) run in CI time.
 
-Both trainers are warmed up first (``DecentralizedTrainer.warmup`` compiles
+Event *generation* (the schedulers' heap loop, host-side numpy) is timed
+separately: it bounds every consumer from above, and the sparse consumer is
+fast enough at paper scale that generation is the next bottleneck.
+
+  python -m benchmarks.bench_event_stream [--paper-scale] [--smoke]
+      # writes BENCH_event_stream.json
+
+All trainers are warmed up first (``DecentralizedTrainer.warmup`` compiles
 via a no-op dispatch), so the numbers compare steady-state throughput, not
-compile time.
+compile time.  ``per_event`` is skipped above N=64 (it would dominate the
+wall clock without adding information — the scan paths are the contenders).
 """
 from __future__ import annotations
 
+import argparse
+import itertools
 import json
 import os
 import time
@@ -23,7 +34,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_row
+from benchmarks.common import bench_sizes, csv_row
 from repro.core import topology
 from repro.core.baselines import make_scheduler
 from repro.core.runner import DecentralizedTrainer
@@ -31,9 +42,9 @@ from repro.core.straggler import StragglerModel
 from repro.data.synthetic import ClassificationData
 
 ALG = "ad_psgd"          # longest event stream of the paper's baselines
-EVENTS = 1024
 BLOCK_SIZE = 128
 D_IN, D_H, BATCH = 16, 16, 4
+PER_EVENT_MAX_N = 64     # legacy interpreter is noise above this scale
 
 _JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_event_stream.json")
@@ -51,26 +62,35 @@ def _init(key):
             "w2": jax.random.normal(k2, (D_H, 10)) * 0.1}
 
 
-def _make_trainer(mode: str, n: int) -> DecentralizedTrainer:
-    data = ClassificationData(n_workers=n, d=D_IN, samples_per_worker=64,
-                              seed=0)
+def _events_for(n: int, smoke: bool) -> int:
+    if smoke:
+        return 64  # a few blocks: proves the paths run, not their speed
+    return {128: 384, 256: 256}.get(n, 1024)
+
+
+def _make_sched(n: int):
     g = topology.erdos_renyi(n, max(0.15, 4.0 / n), seed=1)
     sm = StragglerModel(n=n, straggler_prob=0.1, slowdown=10.0, seed=0)
-    sched = make_scheduler(ALG, g, sm)
+    return make_scheduler(ALG, g, sm)
+
+
+def _make_trainer(mode: str, n: int, block_size: int) -> DecentralizedTrainer:
+    data = ClassificationData(n_workers=n, d=D_IN, samples_per_worker=64,
+                              seed=0)
     # warmup() builds the pool before run() can size it, so pass an explicit
-    # pool covering the observed worst-case restarts/worker of the EVENTS
-    # bound (~81 at N=16); bigger pools measurably slow the per-step gather
-    # on CPU, which would pollute the dispatch-overhead comparison.
-    kw = ({"block_size": BLOCK_SIZE, "batch_pool": 96}
-          if mode == "scan" else {})
+    # pool covering the observed worst-case restarts/worker of the event
+    # bounds used here (~81 at N=16); bigger pools measurably slow the
+    # per-step gather on CPU, which would pollute the dispatch comparison.
+    kw = ({"block_size": block_size, "batch_pool": 96}
+          if mode in ("scan", "sparse_scan") else {})
     return DecentralizedTrainer(
-        sched, _loss, _init,
+        _make_sched(n), _loss, _init,
         lambda w, s: data.batch(w, s, batch_size=BATCH),
         data.eval_batch(256), eta0=0.2, seed=0, mode=mode, **kw)
 
 
-def _events_per_sec(mode: str, n: int, events: int) -> float:
-    tr = _make_trainer(mode, n)
+def _events_per_sec(mode: str, n: int, events: int, block_size: int) -> float:
+    tr = _make_trainer(mode, n, block_size)
     tr.warmup()
     t0 = time.perf_counter()
     res = tr.run(max_events=events, eval_every=10 ** 9)
@@ -79,38 +99,67 @@ def _events_per_sec(mode: str, n: int, events: int) -> float:
     return res.total_events / wall
 
 
-def run(paper_scale: bool = False):
-    sizes = (16, 64, 128) if paper_scale else (16, 64)
-    events = EVENTS * (2 if paper_scale else 1)
+def _generation_events_per_sec(n: int, events: int) -> float:
+    """Host-side scheduler throughput alone: the heap loop + event build."""
+    sched = _make_sched(n)
+    stream = sched.events()
+    next(stream)  # exclude generator setup / first-draw warmup
+    t0 = time.perf_counter()
+    for _ in itertools.islice(stream, events):
+        pass
+    return events / (time.perf_counter() - t0)
+
+
+def run(paper_scale: bool = False, smoke: bool = False):
+    sizes = bench_sizes(paper_scale, smoke)
     results = []
     for n in sizes:
-        per_event = _events_per_sec("per_event", n, events)
-        scan = _events_per_sec("scan", n, events)
-        results.append({
-            "n": n, "alg": ALG, "events": events, "block_size": BLOCK_SIZE,
-            "per_event_eps": per_event, "scan_eps": scan,
-            "speedup": scan / per_event,
-        })
-        yield csv_row(f"event_stream_per_event_n{n}", 1e6 / per_event,
-                      f"{per_event:.0f} events/s")
+        events = _events_for(n, smoke)
+        block = min(BLOCK_SIZE, events)
+        gen = _generation_events_per_sec(n, events)
+        scan = _events_per_sec("scan", n, events, block)
+        sparse = _events_per_sec("sparse_scan", n, events, block)
+        row = {
+            "n": n, "alg": ALG, "events": events, "block_size": block,
+            "gen_eps": gen, "scan_eps": scan, "sparse_eps": sparse,
+            "sparse_speedup": sparse / scan,
+        }
+        yield csv_row(f"event_stream_gen_n{n}", 1e6 / gen,
+                      f"{gen:.0f} events/s generation")
+        if n <= PER_EVENT_MAX_N:
+            per_event = _events_per_sec("per_event", n, events, block)
+            row["per_event_eps"] = per_event
+            row["speedup"] = scan / per_event
+            yield csv_row(f"event_stream_per_event_n{n}", 1e6 / per_event,
+                          f"{per_event:.0f} events/s")
         yield csv_row(f"event_stream_scan_n{n}", 1e6 / scan,
-                      f"{scan:.0f} events/s ({scan / per_event:.1f}x)")
+                      f"{scan:.0f} events/s")
+        yield csv_row(
+            f"event_stream_sparse_n{n}", 1e6 / sparse,
+            f"{sparse:.0f} events/s ({sparse / scan:.1f}x vs dense scan)")
+        results.append(row)
     payload = {
         "bench": "event_stream",
         "jax": jax.__version__,
         "backend": jax.default_backend(),
         "results": results,
     }
-    with open(os.path.abspath(_JSON_PATH), "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
+    if not smoke:  # smoke checks runnability; don't clobber measured rows
+        with open(os.path.abspath(_JSON_PATH), "w") as f:
+            json.dump(payload, f, indent=2)
+            f.write("\n")
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
-    for row in run():
+    for row in run(paper_scale=args.paper_scale, smoke=args.smoke):
         print(row)
-    print(f"# wrote {os.path.abspath(_JSON_PATH)}")
+    if not args.smoke:
+        print(f"# wrote {os.path.abspath(_JSON_PATH)}")
 
 
 if __name__ == "__main__":

@@ -28,12 +28,12 @@ def _time(fn, *args, reps=5):
     return 1e6 * (time.time() - t0) / reps
 
 
-def run(paper_scale: bool = False):
+def run(paper_scale: bool = False, smoke: bool = False):
     rows = []
     key = jax.random.PRNGKey(0)
 
     # gossip_mix: N workers × D params
-    for n, d in ((16, 1 << 16), (32, 1 << 18)):
+    for n, d in ((16, 1 << 12),) if smoke else ((16, 1 << 16), (32, 1 << 18)):
         W = jax.random.normal(key, (n, d))
         P = jnp.asarray(metropolis_matrix(
             n, [(i, (i + 1) % n) for i in range(n)]), jnp.float32)
@@ -43,8 +43,25 @@ def run(paper_scale: bool = False):
         rows.append(csv_row(f"kernel/gossip_mix/N{n}_D{d}", us,
                             f"maxerr_vs_ref={err:.2e}"))
 
+    # sparse_gossip: active-set mix (AD-PSGD A=2 lanes out of N workers)
+    from repro.kernels.sparse_gossip import (sparse_gossip_apply,
+                                             sparse_gossip_apply_ref)
+    for n, d in ((16, 1 << 12),) if smoke else ((64, 1 << 16), (256, 1 << 16)):
+        W = jax.random.normal(key, (n, d))
+        G = jax.random.normal(jax.random.PRNGKey(2), (2, d))
+        P_sub = jnp.full((2, 2), 0.5, jnp.float32)
+        mask = jnp.asarray([0.1, 0.0], jnp.float32)
+        workers = jnp.asarray([1, n - 1], jnp.int32)
+        ref = jax.jit(sparse_gossip_apply_ref)
+        us = _time(ref, W, G, P_sub, mask, workers)
+        err = float(jnp.max(jnp.abs(
+            sparse_gossip_apply(W, G, P_sub, mask, workers)
+            - ref(W, G, P_sub, mask, workers))))
+        rows.append(csv_row(f"kernel/sparse_gossip/N{n}_D{d}_A2", us,
+                            f"maxerr_vs_ref={err:.2e}"))
+
     # linear_scan
-    B, T, D = 2, 512, 256
+    B, T, D = (1, 128, 64) if smoke else (2, 512, 256)
     a = jax.nn.sigmoid(jax.random.normal(key, (B, T, D)))
     x = jax.random.normal(jax.random.PRNGKey(1), (B, T, D))
     ref = jax.jit(linear_scan_ref)
@@ -54,7 +71,8 @@ def run(paper_scale: bool = False):
                         f"maxerr_vs_ref={err:.2e}"))
 
     # swa_attention
-    B, T, H, KV, dh, w = 1, 512, 4, 2, 64, 128
+    B, T, H, KV, dh, w = (1, 256, 4, 2, 64, 128) if smoke else \
+        (1, 512, 4, 2, 64, 128)
     ks = jax.random.split(key, 3)
     q = jax.random.normal(ks[0], (B, T, H, dh))
     k = jax.random.normal(ks[1], (B, T, KV, dh))

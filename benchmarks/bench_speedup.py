@@ -9,16 +9,19 @@ from benchmarks.common import csv_row, make_classification_trainer
 TARGET = 0.9  # training-loss target (2-NN synthetic reaches ~0.4 at plateau)
 
 
-def run(paper_scale: bool = False):
+def run(paper_scale: bool = False, smoke: bool = False):
     ns = (32, 64, 128, 256) if paper_scale else (8, 16, 32)
+    budget = 400.0
+    if smoke:
+        ns, budget = (16,), 40.0
     rows = []
     for n in ns:
         ref = make_classification_trainer("dsgd_sync", n).run(
-            max_time=400.0, eval_every=5)
+            max_time=budget, eval_every=5)
         t_ref = ref.time_to_loss(TARGET) or float("inf")
         for alg in ("dsgd_aau", "ad_psgd", "prague", "agp"):
             res = make_classification_trainer(alg, n).run(
-                max_time=400.0, eval_every=20)
+                max_time=budget, eval_every=20)
             t = res.time_to_loss(TARGET)
             speedup = (t_ref / t) if t else 0.0
             rows.append(csv_row(

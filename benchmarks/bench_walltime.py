@@ -2,9 +2,11 @@
 from benchmarks.common import ALGS, csv_row, make_classification_trainer, timed_run
 
 
-def run(paper_scale: bool = False):
+def run(paper_scale: bool = False, smoke: bool = False):
     n = 128 if paper_scale else 16
     budget = 50.0  # the paper trains ResNet-18 for 50 (real) seconds
+    if smoke:
+        n, budget = 16, 8.0
     rows = []
     for alg in ALGS:
         res, wall = timed_run(make_classification_trainer(alg, n),

@@ -24,6 +24,23 @@ from repro.models import init_model, lm_loss
 
 ALGS = ("dsgd_aau", "dsgd_sync", "ad_psgd", "prague", "agp")
 
+# Worker-count presets: the CPU-friendly default suite, the paper's
+# N ∈ {128, 256} scale (Figures 3–5 at real worker counts — affordable via
+# the sparse active-set scan path), and a --smoke tier that only proves the
+# whole suite still imports and runs.
+SCALES_SMOKE = (16,)
+SCALES_DEFAULT = (16, 64)
+SCALES_PAPER = (128, 256)
+
+
+def bench_sizes(paper_scale: bool = False, smoke: bool = False):
+    """Worker counts a bench should sweep under the harness flags."""
+    if smoke:
+        return SCALES_SMOKE
+    if paper_scale:
+        return SCALES_DEFAULT + SCALES_PAPER
+    return SCALES_DEFAULT
+
 
 def mlp2nn_loss(params, batch):
     """The paper's 2-NN (Table 3 shape, reduced input dim for synthetic data)."""

@@ -1,12 +1,15 @@
 """Benchmark harness: one module per paper table/figure.
 
-  python -m benchmarks.run [--paper-scale] [--only convergence,roofline]
+  python -m benchmarks.run [--paper-scale] [--smoke] [--only convergence,roofline]
 
 Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
 Default scale finishes on CPU in minutes; --paper-scale reproduces the
-paper's N=128 settings (slow).
+paper's N∈{128, 256} settings (slow); --smoke runs every bench at N=16 for
+a few blocks — a fast importable-and-runnable check to pair with the tier-1
+pytest suite (it never overwrites recorded BENCH_*.json results).
 """
 import argparse
+import inspect
 import sys
 import time
 
@@ -17,6 +20,8 @@ MODULES = ("convergence", "walltime", "speedup", "communication",
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="N=16, a few blocks per bench: fast CI check")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(MODULES))
     args = ap.parse_args()
@@ -26,9 +31,15 @@ def main() -> int:
     failures = 0
     for name in chosen:
         mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        kw = {"paper_scale": args.paper_scale}
+        if "smoke" in inspect.signature(mod.run).parameters:
+            kw["smoke"] = args.smoke
+        elif args.smoke:
+            print(f"# bench_{name} has no smoke mode; running at default "
+                  "scale", file=sys.stderr)
         t0 = time.time()
         try:
-            for row in mod.run(paper_scale=args.paper_scale):
+            for row in mod.run(**kw):
                 print(row)
         except Exception as e:  # a failing table is a bug, not a skip
             failures += 1

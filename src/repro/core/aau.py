@@ -23,6 +23,16 @@ Three execution modes share the same math (eq. 5, ``W(k) = [W(k−1) − ηG] P(
    size the pool to the expected restart count for exact per-event
    equivalence.
 
+2b. **Sparse active-set simulator** (`sparse_gossip_scan` /
+   `build_sparse_event_scan`): the same block-compiled scan consuming
+   :class:`~repro.core.scheduler.SparseEventBatch` arrays — per event it
+   *gathers* the ≤A active workers' rows, snapshots, and pool batches,
+   evaluates gradients only for those lanes, mixes with the A×A consensus
+   submatrix (optionally via the Pallas ``sparse_gossip`` gather-fused
+   kernel), and *scatters* the updated rows back.  O(A·D) gradient work and
+   O(A²·D) mixing per event instead of O(n·D)/O(n²·D) — the active-set cut
+   that makes single-edge schedulers (AD-PSGD/AGP, A=2) cheap at N=256.
+
 3. **Sharded production gossip** (`ring_gossip`, `graph_gossip`): inside
    ``shard_map`` over the mesh ``data``/worker axis, neighbor exchange is one
    ``jax.lax.ppermute`` per edge-direction — the TPU-native analogue of the
@@ -253,5 +263,130 @@ def build_event_scan(loss_fn: Callable, use_kernel: bool = False):
         return masked_gossip_scan(
             W, S, y, ptr, pools, grad_fn, P_seq, grad_masks, restart_masks,
             etas, use_kernel=use_kernel)
+
+    return block
+
+
+# ---------------------------------------------------------------------------
+# Sparse active-set path: gather → compute → scatter per event
+# ---------------------------------------------------------------------------
+
+def select_pool_batch_at(pools: Pytree, widx: jax.Array,
+                         ptra: jax.Array) -> Pytree:
+    """Active-set batches: lane a gets ``pool[widx[a], ptra[a] mod pool]``.
+
+    The sparse sibling of :func:`select_pool_batch`: instead of every
+    worker's current batch it gathers only the A active lanes' batches —
+    pools stay untouched for the other n − A workers.
+    """
+    def sel(pool):
+        return pool[widx, ptra % pool.shape[1]]
+    return jax.tree.map(sel, pools)
+
+
+def sparse_gossip_scan(
+    W: Pytree,
+    S: Pytree,
+    y: jax.Array,
+    ptr: jax.Array,
+    pools: Pytree,
+    grad_fn: Callable,
+    workers_seq: jax.Array,
+    P_sub_seq: jax.Array,
+    grad_masks: jax.Array,
+    restart_masks: jax.Array,
+    etas: jax.Array,
+    use_kernel: bool = False,
+) -> Tuple[Pytree, Pytree, jax.Array, jax.Array]:
+    """Advance (W, S, y) through a :class:`SparseEventBatch` in one scan.
+
+    The active-set execution of eq. (5): each scan step *gathers* the A
+    active workers' snapshots, pool batches, and parameter rows, evaluates
+    gradients **only for those lanes** (the ~n× vmap-grad cut for
+    single-edge schedulers), mixes with the A×A consensus submatrix, and
+    *scatters* the A updated rows back — every other worker's ``(W, S, y,
+    ptr)`` row is never touched, read-modify-written only by the scatter's
+    identity complement.
+
+    workers_seq: (E, A) int32, ``-1``-padded (SparseEventBatch lanes);
+    P_sub_seq: (E, A, A); grad_masks/restart_masks: (E, A) per-lane bools;
+    etas: (E,).  Padded lanes carry zero P_sub rows/columns, so they gather
+    row 0 harmlessly, contribute no mass, and their scatter index is mapped
+    out of bounds (dropped).  Returns the updated ``(W, S, y, ptr)``.
+    """
+    n = y.shape[0]
+
+    def expand(mask, leaf):
+        return mask.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
+
+    def body(carry, ev):
+        W, S, y, ptr = carry
+        workers, P_sub, gm, rm, eta = ev
+        valid = workers >= 0
+        gidx = jnp.where(valid, workers, 0)      # clamped gather index
+        sidx = jnp.where(valid, workers, n)      # OOB ⇒ scatter drops the lane
+        # -- gather ------------------------------------------------------
+        Sa = jax.tree.map(lambda s: s[gidx], S)
+        ptra = ptr[gidx]
+        batches = select_pool_batch_at(pools, gidx, ptra)
+        grads = jax.vmap(grad_fn)(Sa, batches)   # A gradient lanes, not n
+        scaled = eta * (gm & valid).astype(jnp.float32)
+        # -- compute: P_subᵀ·(W_a − η·mask⊙G) ----------------------------
+        if use_kernel:
+            from repro.kernels.sparse_gossip import ops as sparse_ops
+            Wn = jax.tree.map(
+                lambda w, g: sparse_ops.sparse_gossip_rows(
+                    w, g, P_sub.astype(w.dtype), scaled.astype(w.dtype),
+                    gidx),
+                W, grads)
+        else:
+            vf = valid.astype(jnp.float32)
+            Pm = P_sub * vf[:, None] * vf[None, :]
+
+            def mix(w, g):
+                Wa = w[gidx]
+                stepped = (Wa - expand(scaled, Wa) * g).reshape(
+                    Wa.shape[0], -1)
+                out = jnp.einsum("ad,ab->bd", stepped, Pm.astype(Wa.dtype),
+                                 precision=jax.lax.Precision.HIGHEST)
+                return out.reshape(Wa.shape)
+
+            Wn = jax.tree.map(mix, W, grads)
+        ya = jnp.einsum("a,ab->b", y[gidx], P_sub.astype(y.dtype))
+        Sn = jax.tree.map(lambda s, w: jnp.where(expand(rm, w) > 0, w, s),
+                          Sa, Wn)
+        # -- scatter -----------------------------------------------------
+        W = jax.tree.map(
+            lambda w, rows: w.at[sidx].set(rows.astype(w.dtype), mode="drop"),
+            W, Wn)
+        S = jax.tree.map(
+            lambda s, rows: s.at[sidx].set(rows.astype(s.dtype), mode="drop"),
+            S, Sn)
+        y = y.at[sidx].set(ya.astype(y.dtype), mode="drop")
+        ptr = ptr.at[sidx].set(ptra + rm.astype(ptr.dtype), mode="drop")
+        return (W, S, y, ptr), None
+
+    carry, _ = jax.lax.scan(
+        body, (W, S, y, ptr),
+        (workers_seq, P_sub_seq, grad_masks, restart_masks, etas))
+    return carry
+
+
+def build_sparse_event_scan(loss_fn: Callable, use_kernel: bool = False):
+    """Returns jit(block)(W, S, y, ptr, pools, workers, P_sub, gm, rm, etas).
+
+    One compiled call advances the stacked state through E active-set
+    events (``SparseEventBatch`` arrays).  The lane width A and block length
+    E are baked into the trace — both are fixed per scheduler/run, so a
+    single compiled program serves the whole stream.
+    """
+    grad_fn = jax.grad(loss_fn)
+
+    @jax.jit
+    def block(W, S, y, ptr, pools, workers_seq, P_sub_seq, grad_masks,
+              restart_masks, etas):
+        return sparse_gossip_scan(
+            W, S, y, ptr, pools, grad_fn, workers_seq, P_sub_seq, grad_masks,
+            restart_masks, etas, use_kernel=use_kernel)
 
     return block

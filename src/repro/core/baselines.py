@@ -49,11 +49,14 @@ class ADPSGDScheduler(Scheduler):
     def edge_bound(self) -> int:
         return 1  # one pairwise averaging per event
 
+    def active_bound(self) -> int:
+        return 2  # the finisher and its chosen neighbor
+
     def events(self) -> Iterator[ScheduleEvent]:
         n = self.n
         heap: List[Tuple[float, int]] = []
-        for i in range(n):
-            heapq.heappush(heap, (self.sampler.sample(i), i))
+        for i, dt in enumerate(self.sampler.sample_batch(np.arange(n))):
+            heapq.heappush(heap, (dt, i))
         k = 0
         lock_free_at = 0.0
         while True:
@@ -103,11 +106,14 @@ class PragueScheduler(Scheduler):
         g = self.group_size
         return g * (g - 1) // 2  # one group clique per event
 
+    def active_bound(self) -> int:
+        return self.group_size  # one group's members per event
+
     def events(self) -> Iterator[ScheduleEvent]:
         n = self.n
         heap: List[Tuple[float, int]] = []
-        for i in range(n):
-            heapq.heappush(heap, (self.sampler.sample(i), i))
+        for i, dt in enumerate(self.sampler.sample_batch(np.arange(n))):
+            heapq.heappush(heap, (dt, i))
         in_group: Dict[int, int] = {}          # worker -> group id
         groups: Dict[int, Set[int]] = {}       # group id -> members
         ready: Dict[int, Set[int]] = {}        # group id -> members finished
@@ -150,9 +156,9 @@ class PragueScheduler(Scheduler):
                 param_copies_sent=2 * (g - 1),
             )
             k += 1
-            for m in members:
+            for m, dt in zip(members, self.sampler.sample_batch(members)):
                 del in_group[m]
-                heapq.heappush(heap, (t + self.sampler.sample(m), m))
+                heapq.heappush(heap, (t + dt, m))
             del groups[gid], ready[gid]
 
 
@@ -177,11 +183,14 @@ class AGPScheduler(Scheduler):
     def edge_bound(self) -> int:
         return 1  # one directed push per event
 
+    def active_bound(self) -> int:
+        return 2  # the pusher and its chosen out-neighbor
+
     def events(self) -> Iterator[ScheduleEvent]:
         n = self.n
         heap: List[Tuple[float, int]] = []
-        for i in range(n):
-            heapq.heappush(heap, (self.sampler.sample(i), i))
+        for i, dt in enumerate(self.sampler.sample_batch(np.arange(n))):
+            heapq.heappush(heap, (dt, i))
         k = 0
         while True:
             t, i = heapq.heappop(heap)

@@ -12,6 +12,14 @@ Execution model — block-compiled by default (``mode="scan"``):
   device through one compiled ``lax.scan`` call per block
   (``masked_gossip_scan``) — one XLA dispatch and zero host round-trips per
   E events, instead of the legacy one-dispatch-per-event interpreter.
+- ``mode="sparse_scan"`` replays the same stream in active-set form
+  (:class:`~repro.core.scheduler.SparseEventBatch` + ``sparse_gossip_scan``):
+  each event gathers only the workers it touches, evaluates gradients for
+  those lanes alone, mixes with the A×A consensus submatrix, and scatters
+  back — O(active_bound·D) per event instead of O(n²·D), the representation
+  that makes paper-scale N=256 streams affordable.  Schedulers whose events
+  are global barriers (sync DSGD, ``Scheduler.global_events``) automatically
+  fall back to the dense scan.
 - Per-worker batches come from a pre-drawn on-device sample pool indexed by
   a restart counter the scan carries.  By default the pool is sized from the
   first run's ``max_events`` bound (capped at 1024), which guarantees exact
@@ -19,10 +27,12 @@ Execution model — block-compiled by default (``mode="scan"``):
   explicitly.  The pointer wraps modulo the pool, so runs with more restarts
   per worker than the pool revisit samples cyclically — a warning is issued
   once if that happens.
-- Evaluation stays on device and fires every ``eval_every`` events; block
-  boundaries are snapped to the eval grid and truncated blocks are padded
-  with identity no-op events, so a single compiled program serves the whole
-  run and the recorded history matches the per-event path point-for-point.
+- Evaluation fires every ``eval_every`` events; block boundaries are snapped
+  to the eval grid and truncated blocks are padded with no-op events, so a
+  single compiled program serves the whole run and the recorded history
+  matches the per-event path point-for-point.  Eval scalars accumulate in a
+  device buffer (one ``.at[i].set`` dispatch per eval, no host sync) and are
+  fetched once when the run ends.
 
 The legacy interpreter is kept behind ``mode="per_event"`` for equivalence
 testing (tests/test_event_stream.py) and as the reference semantics.
@@ -31,15 +41,15 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.aau import (build_event_scan, build_event_step,
-                            debiased_average)
-from repro.core.scheduler import EventBatch, Scheduler
+                            build_sparse_event_scan, debiased_average)
+from repro.core.scheduler import EventBatch, Scheduler, SparseEventBatch
 from repro.utils.tree import tree_size, tree_stack
 
 
@@ -97,14 +107,21 @@ class DecentralizedTrainer:
         seed: int = 0,
         use_kernel: bool = False,
         same_init: bool = True,
-        mode: str = "scan",                 # "scan" (block-compiled) | "per_event" (legacy)
+        mode: str = "scan",                 # "scan" | "sparse_scan" | "per_event"
         block_size: int = 32,               # events per compiled scan call
         batch_pool: Optional[int] = None,   # pre-drawn samples per worker
                                             # (scan mode; None = auto from the
                                             # first run's max_events, cap 1024)
     ):
-        if mode not in ("scan", "per_event"):
-            raise ValueError(f"mode must be 'scan' or 'per_event', got {mode!r}")
+        if mode not in ("scan", "sparse_scan", "per_event"):
+            raise ValueError(
+                "mode must be 'scan', 'sparse_scan' or 'per_event', "
+                f"got {mode!r}")
+        if mode == "sparse_scan" and scheduler.global_events:
+            # Barrier streams (sync DSGD) touch all n workers every event:
+            # the gather-compute-scatter path would gather everything anyway,
+            # so fall back to the dense scan automatically.
+            mode = "scan"
         self.scheduler = scheduler
         self.n = scheduler.n
         self.loss_fn = loss_fn
@@ -131,9 +148,11 @@ class DecentralizedTrainer:
         self._step = None           # per-event jitted update
         self._batches = None        # per-event current batch stack
         self._draw_count = np.zeros(self.n, dtype=np.int64)
-        self._scan = None           # block-compiled jitted update
+        self._scan = None           # block-compiled jitted update (dense)
+        self._sparse = None         # block-compiled jitted update (active-set)
         self._pools = None          # (n, batch_pool, ...) on-device sample pools
         self._ptr = None            # (n,) int32 restart counters
+        self._eval_accum = None     # jitted eval → device-buffer accumulator
 
     # -- legacy per-event state -------------------------------------------
     def _ensure_per_event(self):
@@ -165,23 +184,47 @@ class DecentralizedTrainer:
         self._batches = jax.tree.unflatten(treedef, new_leaves)
 
     # -- scan-mode state ---------------------------------------------------
+    def _ensure_pools(self, max_events: Optional[int] = None):
+        # Restarts per worker are bounded by total events, so a pool of
+        # max_events draws never wraps; explicit batch_pool overrides.
+        if self.batch_pool is not None:
+            pool_len = self.batch_pool
+        else:
+            pool_len = min(max_events, 1024) if max_events else 64
+        if self._pools is not None and self._pool_len >= pool_len:
+            return
+        # pool[i, s] = the s-th batch worker i would draw — identical to
+        # the legacy path's draw sequence, moved on-device ahead of time.
+        # Growing an auto-sized pool (e.g. warmup() built 64, a later
+        # run(max_events=...) needs more) is safe mid-stream: the draw at
+        # (w, s) is a pure function of its arguments, so a larger pool keeps
+        # the prefix already consumed and the carried ``ptr`` stays valid
+        # (the block jit re-traces once for the new pool shape).
+        self._pool_len = pool_len
+        self._pools = tree_stack([
+            tree_stack([self.worker_batch_fn(w, s)
+                        for s in range(pool_len)])
+            for w in range(self.n)])
+        if self._ptr is None:
+            self._ptr = jnp.zeros((self.n,), dtype=jnp.int32)
+
     def _ensure_scan(self, max_events: Optional[int] = None):
         if self._scan is None:
             self._scan = build_event_scan(self.loss_fn, use_kernel=self.use_kernel)
-            # Restarts per worker are bounded by total events, so a pool of
-            # max_events draws never wraps; explicit batch_pool overrides.
-            if self.batch_pool is not None:
-                pool_len = self.batch_pool
-            else:
-                pool_len = min(max_events, 1024) if max_events else 64
-            self._pool_len = pool_len
-            # pool[i, s] = the s-th batch worker i would draw — identical to
-            # the legacy path's draw sequence, moved on-device ahead of time.
-            self._pools = tree_stack([
-                tree_stack([self.worker_batch_fn(w, s)
-                            for s in range(pool_len)])
-                for w in range(self.n)])
-            self._ptr = jnp.zeros((self.n,), dtype=jnp.int32)
+        self._ensure_pools(max_events)
+
+    def _ensure_sparse(self, max_events: Optional[int] = None):
+        if self._sparse is None:
+            self._sparse = build_sparse_event_scan(
+                self.loss_fn, use_kernel=self.use_kernel)
+        self._ensure_pools(max_events)
+
+    def _etas_for(self, batch_E: int, valid_E: int, rounds: int) -> np.ndarray:
+        etas = self.eta0 * self.eta_decay ** (
+            (rounds + np.arange(batch_E)) // self.eta_decay_every)
+        if valid_E < batch_E:
+            etas[valid_E:] = 0.0  # padded no-op events (masks all-False)
+        return etas
 
     def _dispatch_block(self, batch: EventBatch, rounds: int,
                         target: Optional[int] = None) -> None:
@@ -191,13 +234,28 @@ class DecentralizedTrainer:
             target = self.block_size
         if E < target:
             batch = batch.pad_to(target)
-        etas = self.eta0 * self.eta_decay ** (
-            (rounds + np.arange(batch.E)) // self.eta_decay_every)
-        if E < batch.E:
-            etas[E:] = 0.0  # padded no-op events (masks are already all-False)
+        etas = self._etas_for(batch.E, E, rounds)
         self.W, self.S, self.y, self._ptr = self._scan(
             self.W, self.S, self.y, self._ptr, self._pools,
             jnp.asarray(batch.P, dtype=jnp.float32),
+            jnp.asarray(batch.grad_workers),
+            jnp.asarray(batch.restart_workers),
+            jnp.asarray(etas, dtype=jnp.float32),
+        )
+
+    def _dispatch_sparse_block(self, batch: SparseEventBatch, rounds: int,
+                               target: Optional[int] = None) -> None:
+        """One compiled call over active-set arrays: O(A·D) per event."""
+        E = batch.E
+        if target is None:
+            target = self.block_size
+        if E < target:
+            batch = batch.pad_to(target)
+        etas = self._etas_for(batch.E, E, rounds)
+        self.W, self.S, self.y, self._ptr = self._sparse(
+            self.W, self.S, self.y, self._ptr, self._pools,
+            jnp.asarray(batch.workers),
+            jnp.asarray(batch.P_sub, dtype=jnp.float32),
             jnp.asarray(batch.grad_workers),
             jnp.asarray(batch.restart_workers),
             jnp.asarray(etas, dtype=jnp.float32),
@@ -208,11 +266,24 @@ class DecentralizedTrainer:
 
         State is left exactly unchanged (identity P, all-False masks — η is
         traced data, so its warmup values don't matter), letting benchmarks
-        separate compile time from steady-state throughput.  In scan mode
-        the compiled block shape is ``block_size``; a subsequent run whose
-        ``eval_every`` is smaller re-traces once at the smaller shape.
+        separate compile time from steady-state throughput.  In the scan
+        modes the compiled block shape is ``block_size``; a subsequent run
+        whose ``eval_every`` is smaller re-traces once at the smaller
+        shape, and an auto-sized batch pool built here at the 64-draw
+        default grows (one more re-trace) if the run's ``max_events``
+        needs more — pass ``batch_pool`` explicitly to pin both.
         """
         n = self.n
+        if self.mode == "sparse_scan":
+            self._ensure_sparse()
+            noop = SparseEventBatch.from_events(
+                [_identity_event(n)],
+                active_bound=self.scheduler.active_bound(),
+                edge_bound=self.scheduler.edge_bound()).pad_to(self.block_size)
+            self._dispatch_sparse_block(noop, rounds=0)
+            self.y.block_until_ready()
+            self._warm_eval()
+            return
         noop = EventBatch.from_events(
             [_identity_event(n)], edge_bound=1).pad_to(
                 self.block_size if self.mode == "scan" else 1)
@@ -220,17 +291,23 @@ class DecentralizedTrainer:
             self._ensure_scan()
             self._dispatch_block(noop, rounds=0)
             self.y.block_until_ready()
-        else:
-            self._ensure_per_event()
-            ev = noop.to_events()[0]
-            self.W, self.S, self.y = self._step(
-                self.W, self.S, self.y, self._batches,
-                jnp.asarray(ev.P, dtype=jnp.float32),
-                jnp.asarray(ev.grad_workers), jnp.asarray(ev.restart_workers),
-                jnp.float32(0.0),
-            )
-            self.y.block_until_ready()
+            self._warm_eval()
+            return
+        self._ensure_per_event()
+        ev = noop.to_events()[0]
+        self.W, self.S, self.y = self._step(
+            self.W, self.S, self.y, self._batches,
+            jnp.asarray(ev.P, dtype=jnp.float32),
+            jnp.asarray(ev.grad_workers), jnp.asarray(ev.restart_workers),
+            jnp.float32(0.0),
+        )
+        self.y.block_until_ready()
         self._eval_now()
+
+    def _warm_eval(self) -> None:
+        """Compile the scan modes' history eval (state left untouched)."""
+        self._ensure_eval_accum()
+        self._eval_accum(self.W, self.y, self.eval_batch).block_until_ready()
 
     # -- driving loop ------------------------------------------------------
     def run(
@@ -240,8 +317,9 @@ class DecentralizedTrainer:
         eval_every: int = 10,
     ) -> RunResult:
         assert max_events or max_time, "bound the run by events or virtual time"
-        if self.mode == "scan":
-            return self._run_scan(max_events, max_time, eval_every)
+        if self.mode in ("scan", "sparse_scan"):
+            return self._run_scan(max_events, max_time, eval_every,
+                                  sparse=self.mode == "sparse_scan")
         return self._run_per_event(max_events, max_time, eval_every)
 
     def _run_per_event(self, max_events, max_time, eval_every) -> RunResult:
@@ -279,14 +357,25 @@ class DecentralizedTrainer:
                 ))
         return self._finish(history, k, t, comm, rounds, active_sizes)
 
-    def _run_scan(self, max_events, max_time, eval_every) -> RunResult:
-        self._ensure_scan(max_events)
+    def _run_scan(self, max_events, max_time, eval_every,
+                  sparse: bool = False) -> RunResult:
+        if sparse:
+            self._ensure_sparse(max_events)
+            abound = self.scheduler.active_bound()
+        else:
+            self._ensure_scan(max_events)
+        self._ensure_eval_accum()
         bound = self.scheduler.edge_bound()
         # With eval_every < block_size every chunk is exactly eval_every
         # events, so padding to this target (not block_size) wastes nothing
         # while still compiling a single block shape for the whole run.
         target = min(self.block_size, eval_every)
-        history: List[HistoryPoint] = []
+        # Eval scalars accumulate in a device buffer (one .at[i].set dispatch
+        # per eval, zero host syncs); meta carries the host-side fields and
+        # everything is fetched once in _finish_scan.
+        cap = max(2, (max_events // eval_every + 2) if max_events else 16)
+        eval_buf = jnp.zeros((cap, 2), dtype=jnp.float32)
+        meta: List[Tuple[int, float, int, float]] = []  # (k, t, comm, a_mean)
         comm = 0
         active_sizes: List[int] = []
         t = 0.0
@@ -316,24 +405,71 @@ class DecentralizedTrainer:
                 exhausted and buf)
             if not flush:
                 continue
-            self._dispatch_block(
-                EventBatch.from_events(buf, edge_bound=bound), rounds, target)
+            if sparse:
+                self._dispatch_sparse_block(
+                    SparseEventBatch.from_events(
+                        buf, active_bound=abound, edge_bound=bound),
+                    rounds, target)
+            else:
+                self._dispatch_block(
+                    EventBatch.from_events(buf, edge_bound=bound), rounds,
+                    target)
             rounds += len(buf)
             buf = []
             if rounds % eval_every == 0:
-                loss, metric = self._eval_now()
-                history.append(HistoryPoint(
-                    k=k, time=t, loss=loss, metric=metric,
-                    comm_param_copies=comm,
-                    n_active_mean=float(np.mean(active_sizes[-eval_every:])),
-                ))
+                eval_buf = self._record_eval(eval_buf, len(meta))
+                meta.append((k, t, comm,
+                             float(np.mean(active_sizes[-eval_every:]))))
         if rounds and int(jnp.max(self._ptr)) > self._pool_len:
             warnings.warn(
                 f"batch pool of {self._pool_len} draws/worker wrapped "
                 f"(max restarts {int(jnp.max(self._ptr))}): samples were "
                 "revisited cyclically; raise batch_pool (or bound the run "
                 "by max_events) for exact per-event sampling semantics.")
-        return self._finish(history, k, t, comm, rounds, active_sizes)
+        return self._finish_scan(eval_buf, meta, k, t, comm, rounds,
+                                 active_sizes)
+
+    # -- on-device eval history -------------------------------------------
+    def _ensure_eval_accum(self):
+        if self._eval_accum is not None:
+            return
+        eval_fn = self.eval_fn
+
+        @jax.jit
+        def eval_row(W, y, batch):
+            loss, metric = eval_fn(debiased_average(W, y), batch)
+            return jnp.stack([jnp.asarray(loss, dtype=jnp.float32),
+                              jnp.asarray(metric, dtype=jnp.float32)])
+
+        self._eval_accum = eval_row
+
+    def _record_eval(self, eval_buf: jax.Array, i: int) -> jax.Array:
+        # The jitted part (eval at the de-biased average) has run-independent
+        # shapes — warmup() precompiles it; the scatter into the history
+        # buffer is a tiny eager device op (dynamic index: one executable
+        # regardless of i or buffer growth).  No host sync anywhere.
+        row = self._eval_accum(self.W, self.y, self.eval_batch)
+        if i == eval_buf.shape[0]:  # max_time-bounded run outgrew the buffer
+            eval_buf = jnp.concatenate([eval_buf, jnp.zeros_like(eval_buf)])
+        return eval_buf.at[jnp.asarray(i)].set(row)
+
+    def _finish_scan(self, eval_buf, meta, k, t, comm, rounds,
+                     active_sizes) -> RunResult:
+        eval_buf = self._record_eval(eval_buf, len(meta))
+        meta.append((k, t, comm,
+                     float(np.mean(active_sizes)) if active_sizes else 0.0))
+        vals = np.asarray(jax.device_get(eval_buf[:len(meta)]))  # one fetch
+        history = [
+            HistoryPoint(k=mk, time=mt, loss=float(vals[i, 0]),
+                         metric=float(vals[i, 1]), comm_param_copies=mc,
+                         n_active_mean=ma)
+            for i, (mk, mt, mc, ma) in enumerate(meta)]
+        return RunResult(
+            algorithm=self.scheduler.name, history=history,
+            final_loss=history[-1].loss, final_metric=history[-1].metric,
+            total_events=rounds, total_time=t, total_comm_copies=comm,
+            param_count=self.param_count,
+        )
 
     def _finish(self, history, k, t, comm, rounds, active_sizes) -> RunResult:
         loss, metric = self._eval_now()

@@ -13,13 +13,16 @@ The *ordering* of events — not their wall-clock overlap — determines every
 worker's view of its neighbors' parameters, so parameter trajectories are
 faithful to a real asynchronous cluster under the same straggler draws.
 
-Events are consumed either one at a time (:meth:`Scheduler.events`, the
-legacy interpreted path) or packed into :class:`EventBatch` stacked arrays
-that replay inside a single compiled ``lax.scan`` — the representation
-that makes paper-scale N=128/256 streams affordable.  The runner packs
-blocks itself via :meth:`EventBatch.from_events` (its chunking snaps to
-the eval grid and the run bounds); :meth:`Scheduler.event_batches` is the
-standalone fixed-size packing API for benchmarks and diagnostics.
+Events are consumed one at a time (:meth:`Scheduler.events`, the legacy
+interpreted path), packed into dense :class:`EventBatch` stacked arrays
+that replay inside a single compiled ``lax.scan``, or packed into
+:class:`SparseEventBatch` active-set arrays for the gather-compute-scatter
+scan — the representation that makes paper-scale N=128/256 streams
+affordable (a single-edge event carries a 2×2 submatrix instead of an
+n×n one).  The runner packs blocks itself via the ``from_events``
+classmethods (its chunking snaps to the eval grid and the run bounds);
+:meth:`Scheduler.event_batches` / :meth:`Scheduler.sparse_event_batches`
+are the standalone fixed-size packing APIs for benchmarks and diagnostics.
 
 Staleness semantics: a worker's gradient is evaluated at the parameter
 *snapshot it held when it started computing* (``restart_workers`` marks where
@@ -70,8 +73,10 @@ class EventBatch:
     instead of dispatching one jitted step per event from Python.  The dense
     ``P`` stack feeds the update; ``edges``/``n_edges`` are the compact
     active-edge form — fixed width per scheduler (``Scheduler.edge_bound``),
-    ``-1``-padded — kept for diagnostics and as the seed of a future
-    sparse-P kernel (most baselines touch 1 edge out of O(n²) entries).
+    ``-1``-padded — kept for diagnostics and communication accounting.  For
+    the representation that drops the dense stack entirely, see
+    :class:`SparseEventBatch` (most baselines touch 1 edge out of O(n²)
+    entries; the sparse form carries only the active-set submatrices).
     """
     k0: int                         # iteration counter of the first event
     times: np.ndarray               # (E,) float64 virtual completion clocks
@@ -171,10 +176,172 @@ class EventBatch:
         return out
 
 
+@dataclasses.dataclass(frozen=True)
+class SparseEventBatch:
+    """``E`` ScheduleEvents in active-set (gather-compute-scatter) form.
+
+    The sparse sibling of :class:`EventBatch`: instead of the dense
+    ``(E, n, n)`` consensus stack it carries, per event, the sorted list of
+    *active workers* (every worker that fires a gradient, restarts, or sits
+    on an active edge) and the ``A×A`` consensus **sub**matrix restricted to
+    that set.  Every scheduler in this module keeps P identity outside the
+    active set (the invariant tests/test_scheduler.py pins), so the submatrix
+    plus the index list reconstruct the event exactly — at O(A²) packed
+    bytes per event instead of O(n²), which is what drops the dense ``P``
+    stack entirely for single-edge schedulers (A = 2 vs n = 256).
+
+    Lane padding: ``workers`` rows are ``-1``-padded to the scheduler's fixed
+    ``active_bound`` ``A`` (stable shapes ⇒ one compiled scan for the run);
+    padded lanes carry all-zero ``P_sub`` rows *and* columns and all-False
+    masks, so the consumer (core/aau.py ``sparse_gossip_scan`` and the
+    ``sparse_gossip`` kernel) treats them as mass-less no-ops and its
+    scatter drops them.  ``grad_workers``/``restart_workers`` are per-*lane*
+    bools aligned with ``workers``, not per-worker n-vectors.
+
+    ``edges``/``n_edges`` keep the compact active-edge form of
+    :class:`EventBatch` (``-1``-padded to ``edge_bound``) for diagnostics
+    and communication accounting.
+    """
+    k0: int                         # iteration counter of the first event
+    times: np.ndarray               # (E,) float64 virtual completion clocks
+    workers: np.ndarray             # (E, A) int32 sorted active sets, -1-padded
+    n_workers: np.ndarray           # (E,) int32 valid lanes per event
+    P_sub: np.ndarray               # (E, A, A) float32 active-set submatrices
+    grad_workers: np.ndarray        # (E, A) bool, per-lane
+    restart_workers: np.ndarray     # (E, A) bool, per-lane
+    param_copies_sent: np.ndarray   # (E,) int64
+    edges: np.ndarray               # (E, edge_bound, 2) int32, -1-padded
+    n_edges: np.ndarray             # (E,) int32 valid rows of ``edges``
+
+    @property
+    def E(self) -> int:
+        return len(self.times)
+
+    @property
+    def A(self) -> int:
+        return self.workers.shape[1]
+
+    @property
+    def n_active(self) -> np.ndarray:
+        return self.grad_workers.sum(axis=1)
+
+    @classmethod
+    def from_events(cls, events: Sequence[ScheduleEvent], active_bound: int,
+                    edge_bound: Optional[int] = None) -> "SparseEventBatch":
+        if not events:
+            raise ValueError("cannot pack an empty event block")
+        A = max(1, active_bound)
+        ewidth = edge_bound if edge_bound is not None else max(
+            1, max(len(ev.active_edges) for ev in events))
+        E = len(events)
+        workers = np.full((E, A), -1, dtype=np.int32)
+        n_workers = np.zeros(E, dtype=np.int32)
+        P_sub = np.zeros((E, A, A), dtype=np.float32)
+        gm = np.zeros((E, A), dtype=bool)
+        rm = np.zeros((E, A), dtype=bool)
+        edges = np.full((E, ewidth, 2), -1, dtype=np.int32)
+        n_edges = np.zeros(E, dtype=np.int32)
+        for e, ev in enumerate(events):
+            active = set(np.nonzero(ev.grad_workers)[0].tolist())
+            active |= set(np.nonzero(ev.restart_workers)[0].tolist())
+            for a, b in ev.active_edges:
+                active.add(int(a))
+                active.add(int(b))
+            w = sorted(active)
+            m = len(w)
+            if m > A:
+                raise ValueError(
+                    f"event {ev.k} touches {m} workers > active_bound {A}")
+            if m:
+                idx = np.asarray(w, dtype=np.intp)
+                workers[e, :m] = idx
+                P_sub[e, :m, :m] = ev.P[np.ix_(idx, idx)]
+                gm[e, :m] = ev.grad_workers[idx]
+                rm[e, :m] = ev.restart_workers[idx]
+            n_workers[e] = m
+            me = len(ev.active_edges)
+            if me > ewidth:
+                raise ValueError(
+                    f"event {ev.k} has {me} active edges > edge_bound {ewidth}")
+            if me:
+                edges[e, :me] = np.asarray(ev.active_edges, dtype=np.int32)
+            n_edges[e] = me
+        return cls(
+            k0=events[0].k,
+            times=np.asarray([ev.time for ev in events], dtype=np.float64),
+            workers=workers, n_workers=n_workers, P_sub=P_sub,
+            grad_workers=gm, restart_workers=rm,
+            param_copies_sent=np.asarray(
+                [ev.param_copies_sent for ev in events], dtype=np.int64),
+            edges=edges, n_edges=n_edges,
+        )
+
+    def pad_to(self, E: int) -> "SparseEventBatch":
+        """Pad with no-op events (empty active sets) up to length E.
+
+        An empty active set gathers nothing and scatters nothing, so the
+        scan carry ``(W, S, y, ptr)`` passes through bit-exact — the sparse
+        analogue of :meth:`EventBatch.pad_to`'s identity events.
+        """
+        pad = E - self.E
+        if pad < 0:
+            raise ValueError(f"cannot pad E={self.E} down to {E}")
+        if pad == 0:
+            return self
+        A = self.A
+        off = np.zeros((pad, A), dtype=bool)
+        return dataclasses.replace(
+            self,
+            times=np.concatenate([self.times, np.full(pad, self.times[-1])]),
+            workers=np.concatenate(
+                [self.workers, np.full((pad, A), -1, dtype=np.int32)]),
+            n_workers=np.concatenate(
+                [self.n_workers, np.zeros(pad, dtype=np.int32)]),
+            P_sub=np.concatenate(
+                [self.P_sub, np.zeros((pad, A, A), dtype=np.float32)]),
+            grad_workers=np.concatenate([self.grad_workers, off]),
+            restart_workers=np.concatenate([self.restart_workers, off]),
+            param_copies_sent=np.concatenate(
+                [self.param_copies_sent, np.zeros(pad, dtype=np.int64)]),
+            edges=np.concatenate([
+                self.edges,
+                np.full((pad,) + self.edges.shape[1:], -1, dtype=np.int32)]),
+            n_edges=np.concatenate(
+                [self.n_edges, np.zeros(pad, dtype=np.int32)]),
+        )
+
+    def to_events(self, n: int) -> List[ScheduleEvent]:
+        """Reconstruct dense per-event form (round-trip/diagnostic helper)."""
+        out = []
+        for e in range(self.E):
+            m = int(self.n_workers[e])
+            idx = self.workers[e, :m].astype(np.intp)
+            gw = np.zeros(n, dtype=bool)
+            rw = np.zeros(n, dtype=bool)
+            gw[idx] = self.grad_workers[e, :m]
+            rw[idx] = self.restart_workers[e, :m]
+            P = np.eye(n, dtype=np.float32)
+            P[np.ix_(idx, idx)] = self.P_sub[e, :m, :m]
+            me = int(self.n_edges[e])
+            out.append(ScheduleEvent(
+                k=self.k0 + e, time=float(self.times[e]),
+                grad_workers=gw, restart_workers=rw, P=P,
+                active_edges=tuple(map(tuple, self.edges[e, :me])),
+                param_copies_sent=int(self.param_copies_sent[e]),
+            ))
+        return out
+
+
 class Scheduler:
     """Base: iterate ScheduleEvents forever (caller bounds by count/time)."""
 
     name = "base"
+
+    #: True when *every* event touches all n workers (barrier algorithms
+    #: like synchronous DSGD).  The sparse gather-compute-scatter path is
+    #: pure overhead for such streams, so the runner's ``mode="sparse_scan"``
+    #: automatically falls back to the dense scan.
+    global_events = False
 
     def __init__(self, graph: Graph, straggler: StragglerModel):
         if straggler.n != graph.n:
@@ -195,6 +362,16 @@ class Scheduler:
         """
         return max(1, len(self.graph.edges))
 
+    def active_bound(self) -> int:
+        """Max #workers any single event touches (grad, restart, or edge).
+
+        This is the fixed lane width ``A`` of :class:`SparseEventBatch` —
+        the per-event cost of the sparse scan path is O(A·D) gradients plus
+        O(A²·D) mixing, so tight subclass overrides (AD-PSGD/AGP: 2,
+        Prague: group size) are what turn O(n²·D) events into O(D) ones.
+        """
+        return self.n
+
     def event_batches(self, block_size: int) -> Iterator[EventBatch]:
         """Pack consecutive events into EventBatches of ``block_size``.
 
@@ -212,6 +389,23 @@ class Scheduler:
                 buf = []
         if buf:
             yield EventBatch.from_events(buf, edge_bound=bound)
+
+    def sparse_event_batches(self, block_size: int) -> Iterator[SparseEventBatch]:
+        """Pack consecutive events into active-set SparseEventBatches."""
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        abound = self.active_bound()
+        ebound = self.edge_bound()
+        buf: List[ScheduleEvent] = []
+        for ev in self.events():
+            buf.append(ev)
+            if len(buf) == block_size:
+                yield SparseEventBatch.from_events(
+                    buf, active_bound=abound, edge_bound=ebound)
+                buf = []
+        if buf:
+            yield SparseEventBatch.from_events(
+                buf, active_bound=abound, edge_bound=ebound)
 
     # -- shared helpers ---------------------------------------------------
     def _mask(self, workers) -> np.ndarray:
@@ -238,8 +432,8 @@ class AAUScheduler(Scheduler):
         n = self.n
         ps = PathSearchState(self.graph)
         heap: List[Tuple[float, int]] = []
-        for i in range(n):
-            heapq.heappush(heap, (self.sampler.sample(i), i))
+        for i, dt in enumerate(self.sampler.sample_batch(np.arange(n))):
+            heapq.heappush(heap, (dt, i))
         finished: set = set()
         k = 0
         while True:
@@ -266,8 +460,10 @@ class AAUScheduler(Scheduler):
                 param_copies_sent=2 * len(active_edges),
             )
             k += 1
-            for j in fin:
-                heapq.heappush(heap, (t + self.sampler.sample(j), j))
+            # batch-draw the restarted workers' next completion times: one
+            # vectorized RNG call instead of one heap-push-sized draw each
+            for j, dt in zip(fin, self.sampler.sample_batch(fin)):
+                heapq.heappush(heap, (t + dt, j))
             finished.clear()
             if n > 1 and ps.epoch_complete():
                 ps.reset_epoch()
@@ -281,6 +477,7 @@ class SyncScheduler(Scheduler):
     """Synchronous DSGD (eq. 2): every iteration waits for *all* workers."""
 
     name = "dsgd_sync"
+    global_events = True  # every event is a full barrier: sparse buys nothing
 
     def events(self) -> Iterator[ScheduleEvent]:
         n = self.n

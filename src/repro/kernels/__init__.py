@@ -4,4 +4,4 @@ Each kernel ships as <name>/kernel.py (pl.pallas_call + BlockSpec),
 <name>/ops.py (jitted wrapper) and <name>/ref.py (pure-jnp oracle);
 tests sweep shapes/dtypes against the oracle in interpret mode.
 """
-from repro.kernels import gossip_mix, linear_scan, swa_attention
+from repro.kernels import gossip_mix, linear_scan, sparse_gossip, swa_attention

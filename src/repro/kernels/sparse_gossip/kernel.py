@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: active-set gossip mixing via gather → mix → (scatter).
+
+The sparse counterpart of ``gossip_mix``: an asynchronous event touches only
+the ``A`` workers named by its active-edge list (AD-PSGD/AGP touch 2 of N;
+DSGD-AAU a finished subset), and every consensus matrix the schedulers emit
+is identity outside that set.  Mixing therefore only needs the A×A submatrix
+``P_sub`` and the A gathered worker rows — O(A²·D) work instead of the dense
+kernel's O(N²·D), the factor that makes paper-scale N=256 streams cheap.
+
+``sparse_gossip_pallas`` computes the *compact* mixed rows
+
+    out[b] = Σ_a P_sub[a, b] · W[workers[a]]  −  Σ_a Q_sub[a, b] · G[a]
+
+with the gather fused into the kernel: ``workers`` is a scalar-prefetch
+operand (``pltpu.PrefetchScalarGridSpec``), so the BlockSpec index map DMAs
+exactly the A active rows of W out of HBM — inactive rows are never read.
+As with the dense ``masked_gossip`` kernel, Q = diag(η·grad_mask)·P_sub
+folds the gradient step into the same pass: out = P_subᵀ·(W_a − η·mask⊙G).
+
+Grid layout: ``(D // block_d, A)`` with the active-row axis innermost.  The
+(A, block_d) output tile has a constant index over the inner axis, so it
+stays VMEM-resident while each step accumulates one gathered row's
+rank-1 contribution (P_sub[a, :] ⊗ W[workers[a]] tile).  P_sub/Q_sub stay
+resident across the whole grid.
+
+The *scatter* half of the gather-compute-scatter contract deliberately stays
+outside the kernel (ops.py ``sparse_gossip_apply``): writing updated rows
+back into a W-aliased output would race the gather reads of later grid steps
+(every output row is also an input row of the mix), so ops scatters the
+compact result with a deterministic ``.at[workers].set(..., mode="drop")``.
+
+Padding contract (ops.py enforces it): padded lanes carry ``workers`` index 0
+(any valid row — its contribution is annihilated) and all-zero P_sub/Q_sub
+rows *and* columns, so they neither contribute to nor receive mass; their
+compact output rows are exactly zero and the scatter drops them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sparse_gossip_kernel(workers_ref, p_ref, q_ref, w_ref, g_ref, o_ref):
+    # workers_ref: (A,) scalar-prefetch (consumed by the index maps);
+    # p_ref/q_ref: (A, A) resident; w_ref: (1, Dt) gathered row W[workers[a]];
+    # g_ref: (1, Dt) compact gradient row a; o_ref: (A, Dt) resident tile.
+    del workers_ref
+    a = pl.program_id(1)
+
+    @pl.when(a == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    contrib = (p_ref[a, :][:, None] * w_ref[...]
+               - q_ref[a, :][:, None] * g_ref[...])
+    o_ref[...] += contrib.astype(o_ref.dtype)
+
+
+def sparse_gossip_pallas(W: jax.Array, G: jax.Array, P_sub: jax.Array,
+                         Q_sub: jax.Array, workers: jax.Array, *,
+                         block_d: int = 512,
+                         interpret: bool = False) -> jax.Array:
+    """Compact active-set mix: out = P_subᵀ·W[workers] − Q_subᵀ·G.
+
+    W: (N, D) full worker-stacked state (only ``workers`` rows are read);
+    G: (A, D) active-set gradients; P_sub/Q_sub: (A, A); workers: (A,) int32
+    row indices in [0, N).  Returns the (A, D) mixed active rows.
+    """
+    N, D = W.shape
+    A = workers.shape[0]
+    assert G.shape == (A, D), (G.shape, (A, D))
+    assert P_sub.shape == (A, A) and Q_sub.shape == (A, A), (
+        P_sub.shape, Q_sub.shape)
+    assert D % block_d == 0, (D, block_d)
+    grid = (D // block_d, A)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((A, A), lambda d, a, workers: (0, 0)),  # P resident
+            pl.BlockSpec((A, A), lambda d, a, workers: (0, 0)),  # Q resident
+            # the gather: row a of the active set comes from W[workers[a]]
+            pl.BlockSpec((1, block_d), lambda d, a, workers: (workers[a], d)),
+            pl.BlockSpec((1, block_d), lambda d, a, workers: (a, d)),
+        ],
+        out_specs=pl.BlockSpec((A, block_d), lambda d, a, workers: (0, d)),
+    )
+    return pl.pallas_call(
+        _sparse_gossip_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((A, D), W.dtype),
+        interpret=interpret,
+    )(workers, P_sub, Q_sub, W, G)

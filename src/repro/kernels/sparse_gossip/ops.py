@@ -1,0 +1,94 @@
+"""Jitted wrappers for the sparse_gossip kernel: padding, masking, scatter.
+
+The gather-compute-**scatter** contract lives here: ``sparse_gossip_rows``
+returns the compact (A, ...) mixed active rows (gather + mix fused in the
+kernel), and ``sparse_gossip_apply`` scatters them back into the full
+(N, ...) state with ``.at[workers].set(..., mode="drop")`` — deterministic
+and safe because valid active-set indices are unique and padded lanes map
+out of bounds.
+
+Padding semantics (shared with core/scheduler.py ``SparseEventBatch``):
+``workers`` is ``-1``-padded to the scheduler's fixed ``active_bound``.
+Before the kernel sees anything, padded lanes are clamped to row 0 and their
+P_sub rows/columns and mask entries are zeroed, so a padded lane neither
+contributes mass nor receives any — its compact output row is exactly zero
+and the scatter drops it.  The lane axis A is additionally padded up to the
+8-sublane boundary and D up to the lane-aligned tile, exactly like
+gossip_mix/ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sparse_gossip.kernel import sparse_gossip_pallas
+
+_SUBLANE = 8
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def sparse_gossip_rows(W: jax.Array, G: jax.Array, P_sub: jax.Array,
+                       scaled_mask: jax.Array, workers: jax.Array, *,
+                       block_d: int = 512,
+                       interpret: bool | None = None) -> jax.Array:
+    """Compact active-set event update rows for one (N, ...) leaf.
+
+    out[b] = Σ_a P_sub[a, b]·(W[workers[a]] − scaled_mask[a]·G[a]) for the
+    valid lanes; zero rows for ``-1``-padded lanes.  W: (N, ...); G: (A, ...)
+    active-set gradients; P_sub: (A, A); scaled_mask: (A,) = η·grad_mask.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    N = W.shape[0]
+    A = workers.shape[0]
+    valid = workers >= 0
+    gidx = jnp.where(valid, workers, 0).astype(jnp.int32)
+    vf = valid.astype(P_sub.dtype)
+    P = P_sub * vf[:, None] * vf[None, :]
+    Q = (scaled_mask * vf).astype(P.dtype)[:, None] * P
+
+    flat_w = W.reshape(N, -1)
+    flat_g = G.reshape(A, -1).astype(flat_w.dtype)
+    D = flat_w.shape[1]
+    Dp = _pad_up(D, block_d)
+    Ap = _pad_up(A, _SUBLANE)
+    if Dp != D:
+        flat_w = jnp.pad(flat_w, ((0, 0), (0, Dp - D)))
+        flat_g = jnp.pad(flat_g, ((0, 0), (0, Dp - D)))
+    if Ap != A:
+        flat_g = jnp.pad(flat_g, ((0, Ap - A), (0, 0)))
+        P = jnp.pad(P, ((0, Ap - A), (0, Ap - A)))
+        Q = jnp.pad(Q, ((0, Ap - A), (0, Ap - A)))
+        gidx = jnp.pad(gidx, (0, Ap - A))  # clamped lanes with zero P/Q rows
+    out = sparse_gossip_pallas(flat_w, flat_g, P.astype(flat_w.dtype),
+                               Q.astype(flat_w.dtype), gidx,
+                               block_d=block_d, interpret=interpret)
+    return out[:A, :D].reshape((A,) + W.shape[1:])
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def sparse_gossip_apply(W: jax.Array, G: jax.Array, P_sub: jax.Array,
+                        scaled_mask: jax.Array, workers: jax.Array, *,
+                        block_d: int = 512,
+                        interpret: bool | None = None) -> jax.Array:
+    """Full event update for one leaf: gather → mix → scatter.
+
+    Returns W′ where active rows hold P_subᵀ·(W_a − η·mask⊙G) and every
+    other row is untouched — the sparse equivalent of the dense fused
+    ``masked_gossip_mix`` with the (implicit) N×N matrix that is identity
+    off the active set.
+    """
+    rows = sparse_gossip_rows(W, G, P_sub, scaled_mask, workers,
+                              block_d=block_d, interpret=interpret)
+    sidx = jnp.where(workers >= 0, workers, W.shape[0])
+    return W.at[sidx].set(rows.astype(W.dtype), mode="drop")

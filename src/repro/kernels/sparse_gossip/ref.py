@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the sparse_gossip kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def sparse_gossip_ref(W: jax.Array, G: jax.Array, P_sub: jax.Array,
+                      Q_sub: jax.Array, workers: jax.Array) -> jax.Array:
+    """Compact active-set mix: out = P_subᵀ·W[workers] − Q_subᵀ·G.
+
+    ``workers`` may carry ``-1`` padding: padded lanes are clamped to row 0
+    and must come with all-zero P_sub/Q_sub rows and columns (the ops-layer
+    contract), so they contribute and receive nothing.
+    """
+    idx = jnp.clip(workers, 0, W.shape[0] - 1)
+    Wa = W[idx].astype(jnp.float32)
+    out = (jnp.einsum("ad,ab->bd", Wa, P_sub.astype(jnp.float32))
+           - jnp.einsum("ad,ab->bd", G.astype(jnp.float32),
+                        Q_sub.astype(jnp.float32)))
+    return out.astype(W.dtype)
+
+
+def sparse_gossip_apply_ref(W: jax.Array, G: jax.Array, P_sub: jax.Array,
+                            scaled_mask: jax.Array,
+                            workers: jax.Array) -> jax.Array:
+    """Full-state oracle: gather → mix → scatter, identity off the active set.
+
+    Equals the dense ``masked_gossip_ref`` applied to the N×N matrix that is
+    identity everywhere except the active-set block ``P_sub``.
+    """
+    Q_sub = scaled_mask.astype(jnp.float32)[:, None] * P_sub.astype(jnp.float32)
+    rows = sparse_gossip_ref(W, G, P_sub, Q_sub, workers)
+    sidx = jnp.where(workers >= 0, workers, W.shape[0])
+    return W.at[sidx].set(rows.astype(W.dtype), mode="drop")

@@ -95,8 +95,9 @@ class TestEventBatchPacking:
         tr = _trainer("dsgd_aau", "scan")
         tr._ensure_scan()
         W0 = jax.tree.map(lambda x: np.asarray(x).copy(), tr.W)
-        ev = itertools.islice(_sched("dsgd_aau").events(), 1)
-        noop = EventBatch.from_events(list(ev), edge_bound=1)
+        sched = _sched("dsgd_aau")
+        ev = itertools.islice(sched.events(), 1)
+        noop = EventBatch.from_events(list(ev), edge_bound=sched.edge_bound())
         off = np.zeros_like(noop.grad_workers)
         import dataclasses
         noop = dataclasses.replace(
