@@ -11,9 +11,13 @@ paper's baselines, one event per worker-finish):
   mix and O(A·D) gradients with A=2 for AD-PSGD, the path that makes
   N∈{128, 256} (paper Figures 3–5 worker counts) run in CI time.
 
-Event *generation* (the schedulers' heap loop, host-side numpy) is timed
-separately: it bounds every consumer from above, and the sparse consumer is
-fast enough at paper scale that generation is the next bottleneck.
+Event *generation* (host-side numpy) is timed separately: it bounds every
+consumer from above.  Two generator variants are measured: the default
+sparse-native per-event stream (bit-exact with recorded runs — no dense
+``np.eye(n)`` per event, O(1) host work for single-edge schedulers), and
+the opt-in event-horizon batcher (``horizon=K``: vectorized K-draw RNG
+chunks + an argmin reorder buffer — deterministic but a different RNG-order
+realization, see core/baselines.py).
 
   python -m benchmarks.bench_event_stream [--paper-scale] [--smoke]
       # writes BENCH_event_stream.json
@@ -68,10 +72,10 @@ def _events_for(n: int, smoke: bool) -> int:
     return {128: 384, 256: 256}.get(n, 1024)
 
 
-def _make_sched(n: int):
+def _make_sched(n: int, **kw):
     g = topology.erdos_renyi(n, max(0.15, 4.0 / n), seed=1)
     sm = StragglerModel(n=n, straggler_prob=0.1, slowdown=10.0, seed=0)
-    return make_scheduler(ALG, g, sm)
+    return make_scheduler(ALG, g, sm, **kw)
 
 
 def _make_trainer(mode: str, n: int, block_size: int) -> DecentralizedTrainer:
@@ -99,9 +103,10 @@ def _events_per_sec(mode: str, n: int, events: int, block_size: int) -> float:
     return res.total_events / wall
 
 
-def _generation_events_per_sec(n: int, events: int) -> float:
-    """Host-side scheduler throughput alone: the heap loop + event build."""
-    sched = _make_sched(n)
+def _generation_events_per_sec(n: int, events: int,
+                               horizon=None) -> float:
+    """Host-side scheduler throughput alone: the event loop + event build."""
+    sched = _make_sched(n, horizon=horizon)
     stream = sched.events()
     next(stream)  # exclude generator setup / first-draw warmup
     t0 = time.perf_counter()
@@ -117,15 +122,19 @@ def run(paper_scale: bool = False, smoke: bool = False):
         events = _events_for(n, smoke)
         block = min(BLOCK_SIZE, events)
         gen = _generation_events_per_sec(n, events)
+        gen_horizon = _generation_events_per_sec(n, events, horizon=256)
         scan = _events_per_sec("scan", n, events, block)
         sparse = _events_per_sec("sparse_scan", n, events, block)
         row = {
             "n": n, "alg": ALG, "events": events, "block_size": block,
-            "gen_eps": gen, "scan_eps": scan, "sparse_eps": sparse,
+            "gen_eps": gen, "gen_horizon_eps": gen_horizon,
+            "scan_eps": scan, "sparse_eps": sparse,
             "sparse_speedup": sparse / scan,
         }
         yield csv_row(f"event_stream_gen_n{n}", 1e6 / gen,
                       f"{gen:.0f} events/s generation")
+        yield csv_row(f"event_stream_gen_horizon_n{n}", 1e6 / gen_horizon,
+                      f"{gen_horizon:.0f} events/s horizon generation")
         if n <= PER_EVENT_MAX_N:
             per_event = _events_per_sec("per_event", n, events, block)
             row["per_event_eps"] = per_event

@@ -6,25 +6,227 @@ algorithms — only the (N(k), P(k)) sequence differs.  This mirrors the paper's
 framing where every algorithm is an instance of eq. (5) with a different
 consensus-matrix process.
 
-The compiled scan path packs these streams into EventBatches like any
-other scheduler's; per-scheduler ``edge_bound`` overrides keep the
-EventBatch compact-edge arrays at their true width (AD-PSGD/AGP touch one
-edge per event, Prague at most one group's clique) instead of the full
-graph's.
+Events are sparse-native (see core/scheduler.py): a single-edge event is two
+int32 lanes plus a 2×2 submatrix, never an (n, n) matrix, which keeps event
+*generation* O(1) per event — the host-side heap loop used to be the
+consumer's ceiling at paper scale.  Per-scheduler ``edge_bound`` /
+``active_bound`` overrides keep the packed arrays at their true width
+(AD-PSGD/AGP touch one edge per event, Prague at most one group's clique)
+instead of the full graph's.
+
+Event-horizon batching: the single-edge schedulers accept ``horizon=K`` to
+pre-draw K future completion-time factors and K neighbor picks in two
+vectorized RNG calls, replacing the per-event ``heapq`` push/pop with an
+argmin over a numpy reorder buffer of per-worker next-completion times.
+The horizon stream is fully deterministic and distributionally identical,
+but consumes the RNG streams in a different order than the per-event path
+(vector draws cannot interleave with numpy's scalar ziggurat draws), so it
+is a *different* realization: leave ``horizon=None`` (the default) wherever
+bit-exact reproduction of recorded runs matters.
 """
 from __future__ import annotations
 
 import heapq
-from typing import Dict, Iterator, List, Set, Tuple
+from typing import Dict, Iterator, List, Optional, Set, Tuple
 
 import numpy as np
 
-from repro.core.scheduler import Scheduler, ScheduleEvent
+from repro.core.scheduler import _EMPTY_EDGES, Scheduler, ScheduleEvent
 from repro.core.straggler import StragglerModel
 from repro.core.topology import Graph
 
 
-class ADPSGDScheduler(Scheduler):
+def _frozen(a: np.ndarray) -> np.ndarray:
+    """Shared per-class event payloads: mark read-only so aliasing is safe."""
+    a.flags.writeable = False
+    return a
+
+
+# Pairwise-averaging submatrix (AD-PSGD) and per-lane masks for a sorted
+# worker pair (a, b): shared across every event of every scheduler instance.
+_P_PAIR_AVG = _frozen(np.full((2, 2), 0.5))
+_P_SELF = _frozen(np.ones((1, 1)))
+# Push-sum split: the *sender's row* keeps half and pushes half (AGP).
+_P_PUSH_FIRST = _frozen(np.array([[0.5, 0.5], [0.0, 1.0]]))
+_P_PUSH_SECOND = _frozen(np.array([[1.0, 0.0], [0.5, 0.5]]))
+_LANE_FIRST = _frozen(np.array([True, False]))
+_LANE_SECOND = _frozen(np.array([False, True]))
+_LANE_SELF = _frozen(np.ones(1, dtype=bool))
+
+
+class _SingleEdgeScheduler(Scheduler):
+    """Shared machinery for the one-edge-per-event baselines (AD-PSGD, AGP).
+
+    Subclasses define the pair event via ``_pair_payload`` and whether an
+    event serializes on the atomic-averaging lock (``lock_time`` > 0).
+    """
+
+    lock_time = 0.0
+
+    def __init__(self, graph: Graph, straggler: StragglerModel, seed: int,
+                 horizon: Optional[int] = None):
+        super().__init__(graph, straggler)
+        self._rng = np.random.default_rng(seed)
+        if horizon is not None and horizon < 1:
+            raise ValueError("horizon must be a positive chunk size or None")
+        self.horizon = horizon
+        self._nbrs = graph.neighbor_lists
+
+    def edge_bound(self) -> int:
+        return 1  # one pairwise exchange per event
+
+    def active_bound(self) -> int:
+        return 2  # the finisher and its chosen neighbor
+
+    # -- subclass hooks ----------------------------------------------------
+    def _pair_payload(self, i: int, r: int):
+        """(workers, P_sub, grad_lanes, copies) for finisher i and pick r."""
+        raise NotImplementedError
+
+    def _pair_event(self, k: int, t: float, i: int, r: int) -> ScheduleEvent:
+        workers, P_sub, lanes, copies = self._pair_payload(i, r)
+        a = int(workers[0])
+        b = int(workers[1])
+        return ScheduleEvent(
+            k=k, time=t, n=self.n, workers=workers, P_sub=P_sub,
+            grad_lanes=lanes, restart_lanes=lanes,
+            edges=np.array(((a, b),), dtype=np.int32),
+            param_copies_sent=copies,
+        )
+
+    def _isolated_event(self, k: int, t: float, i: int) -> ScheduleEvent:
+        """A worker with no graph neighbors: purely local gradient step."""
+        return ScheduleEvent(
+            k=k, time=t, n=self.n,
+            workers=np.array((i,), dtype=np.int32), P_sub=_P_SELF,
+            grad_lanes=_LANE_SELF, restart_lanes=_LANE_SELF,
+            edges=_EMPTY_EDGES, param_copies_sent=0,
+        )
+
+    def _needs_sorted_emission(self) -> bool:
+        """Lock-shifted and lock-free event times can interleave out of
+        order only when the lock exists *and* some worker skips it (no
+        neighbors): isolated workers fire at raw completion times while
+        locked events fire at the (later) serialized lock times.  Consumers
+        bound runs by ``event.time > max_time``, so the stream must stay
+        time-sorted — those graphs route events through a small reorder
+        heap.  Connected graphs (and lock-free schedulers like AGP) are
+        already monotone and skip the buffer entirely.
+        """
+        return bool(self.lock_time) and any(
+            len(nb) == 0 for nb in self._nbrs)
+
+    # -- event generation --------------------------------------------------
+    def events(self) -> Iterator[ScheduleEvent]:
+        if self.horizon:
+            return self._events_horizon(self.horizon)
+        return self._events_exact()
+
+    def _events_exact(self) -> Iterator[ScheduleEvent]:
+        """The canonical stream: RNG draws happen per event, in event order,
+        so recorded runs replay bit-exactly across refactors."""
+        n = self.n
+        sampler = self.sampler
+        rng = self._rng
+        nbrs_list = self._nbrs
+        lock_dt = self.lock_time
+        heap: List[Tuple[float, int]] = []
+        for i, dt in enumerate(sampler.sample_batch(np.arange(n))):
+            heapq.heappush(heap, (dt, i))
+        push, pop = heapq.heappush, heapq.heappop
+        # Reorder heap for time-sorted emission (only engaged on graphs that
+        # mix locked and lock-free events — see _needs_sorted_emission): an
+        # event computed at heap-pop time t can be emitted once the pop
+        # clock reaches its (possibly lock-shifted) time, because every
+        # later-computed event's time is >= the pop clock.
+        out: Optional[List[Tuple[float, int, ScheduleEvent]]] = (
+            [] if self._needs_sorted_emission() else None)
+        seq = 0
+        k = 0
+        lock_free_at = 0.0
+        while True:
+            t, i = pop(heap)
+            if out is not None:
+                while out and out[0][0] <= t:
+                    ev = heapq.heappop(out)[2]
+                    ev.k = k
+                    k += 1
+                    yield ev
+            nbrs = nbrs_list[i]
+            m = len(nbrs)
+            if m:
+                if lock_dt:
+                    # serialized atomic averaging: wait for the lock
+                    t = (t if t > lock_free_at else lock_free_at) + lock_dt
+                    lock_free_at = t
+                r = int(nbrs[rng.integers(0, m)])
+                ev = self._pair_event(k, t, i, r)
+            else:
+                # an isolated worker averages with nobody: no neighbor draw,
+                # no lock acquisition, no copies moved — its gradient lands
+                # at its own completion time
+                ev = self._isolated_event(k, t, i)
+            if out is None:
+                k += 1
+                yield ev
+            else:
+                heapq.heappush(out, (float(t), seq, ev))
+                seq += 1
+            push(heap, (t + sampler.sample(i), i))
+
+    def _events_horizon(self, K: int) -> Iterator[ScheduleEvent]:
+        """Event-horizon batching: K events' RNG ahead of time, argmin pops.
+
+        Draws K completion-time factors (one lognormal + one uniform vector
+        call, ``TimeSampler.sample_horizon``) and K neighbor picks (one
+        uniform vector call) per chunk, and replaces the heap with a (n,)
+        numpy reorder buffer of next-completion times — per-event work is
+        one ``argmin`` plus array stores.  Deterministic, but a different
+        RNG-stream order than :meth:`_events_exact` (see module docstring).
+        """
+        n = self.n
+        sampler = self.sampler
+        base = sampler.base
+        nbrs_list = self._nbrs
+        lock_dt = self.lock_time
+        times = np.asarray(sampler.sample_batch(np.arange(n)), dtype=np.float64)
+        out: Optional[List[Tuple[float, int, ScheduleEvent]]] = (
+            [] if self._needs_sorted_emission() else None)
+        seq = 0
+        k = 0
+        lock_free_at = 0.0
+        while True:
+            factors = sampler.sample_horizon(K)
+            picks = self._rng.random(K)
+            for j in range(K):
+                i = int(times.argmin())
+                t = float(times[i])
+                if out is not None:
+                    while out and out[0][0] <= t:
+                        ev = heapq.heappop(out)[2]
+                        ev.k = k
+                        k += 1
+                        yield ev
+                nbrs = nbrs_list[i]
+                m = len(nbrs)
+                if m:
+                    if lock_dt:
+                        t = (t if t > lock_free_at else lock_free_at) + lock_dt
+                        lock_free_at = t
+                    r = int(nbrs[int(picks[j] * m)])
+                    ev = self._pair_event(k, t, i, r)
+                else:
+                    ev = self._isolated_event(k, t, i)
+                if out is None:
+                    k += 1
+                    yield ev
+                else:
+                    heapq.heappush(out, (t, seq, ev))
+                    seq += 1
+                times[i] = t + base[i] * factors[j]
+
+
+class ADPSGDScheduler(_SingleEdgeScheduler):
     """AD-PSGD [Lian et al. 2018].
 
     A worker that finishes its gradient immediately averages pairwise with one
@@ -34,53 +236,25 @@ class ADPSGDScheduler(Scheduler):
     motivation): conflicting concurrent averagings must serialize, so each
     average occupies the "update lock" for ``avg_time`` virtual seconds and
     queued workers wait — the throughput ceiling that makes AD-PSGD stop
-    scaling with N.  P(k) is doubly stochastic: identity except a 2×2 block
-    of 1/2.
+    scaling with N.  Workers with no neighbors never average, so they skip
+    the lock entirely and send nothing.  P(k) is doubly stochastic: identity
+    except a 2×2 block of 1/2.
     """
 
     name = "ad_psgd"
 
     def __init__(self, graph: Graph, straggler: StragglerModel, seed: int = 1,
-                 avg_time: float = 0.05):
-        super().__init__(graph, straggler)
-        self._rng = np.random.default_rng(seed)
+                 avg_time: float = 0.05, horizon: Optional[int] = None):
+        super().__init__(graph, straggler, seed=seed, horizon=horizon)
         self.avg_time = avg_time * straggler.base_time
+        self.lock_time = self.avg_time
 
-    def edge_bound(self) -> int:
-        return 1  # one pairwise averaging per event
-
-    def active_bound(self) -> int:
-        return 2  # the finisher and its chosen neighbor
-
-    def events(self) -> Iterator[ScheduleEvent]:
-        n = self.n
-        heap: List[Tuple[float, int]] = []
-        for i, dt in enumerate(self.sampler.sample_batch(np.arange(n))):
-            heapq.heappush(heap, (dt, i))
-        k = 0
-        lock_free_at = 0.0
-        while True:
-            t, i = heapq.heappop(heap)
-            t = max(t, lock_free_at) + self.avg_time   # serialized averaging
-            lock_free_at = t
-            nbrs = self.graph.neighbors(i)
-            P = np.eye(n)
-            edges: Tuple[Tuple[int, int], ...] = ()
-            copies = 0
-            if len(nbrs):
-                r = int(self._rng.choice(nbrs))
-                P[i, i] = P[r, r] = 0.5
-                P[i, r] = P[r, i] = 0.5
-                edges = ((min(i, r), max(i, r)),)
-                copies = 2
-            yield ScheduleEvent(
-                k=k, time=t,
-                grad_workers=self._mask([i]),
-                restart_workers=self._mask([i]),  # neighbor keeps its stale snapshot
-                P=P, active_edges=edges, param_copies_sent=copies,
-            )
-            k += 1
-            heapq.heappush(heap, (t + self.sampler.sample(i), i))
+    def _pair_payload(self, i: int, r: int):
+        if i < r:
+            return (np.array((i, r), dtype=np.int32), _P_PAIR_AVG,
+                    _LANE_FIRST, 2)
+        return (np.array((r, i), dtype=np.int32), _P_PAIR_AVG,
+                _LANE_SECOND, 2)
 
 
 class PragueScheduler(Scheduler):
@@ -141,17 +315,17 @@ class PragueScheduler(Scheduler):
                 continue  # group still waiting on a member (possibly a straggler)
             members = sorted(groups[gid])
             g = len(members)
-            P = np.eye(n)
-            for a in members:
-                for b in members:
-                    P[a, b] = 1.0 / g
-            edges = tuple(
-                (members[x], members[y]) for x in range(g) for y in range(x + 1, g)
-            )
-            mask = self._mask(members)
+            widx = np.asarray(members, dtype=np.int32)
+            # the group's partial all-reduce: a g×g block of 1/g, identity
+            # outside — built at its true size, never as an (n, n) matrix
+            iu, ju = np.triu_indices(g, k=1)
+            lanes = np.ones(g, dtype=bool)
             yield ScheduleEvent(
-                k=k, time=t, grad_workers=mask, restart_workers=mask, P=P,
-                active_edges=edges,
+                k=k, time=t, n=n, workers=widx,
+                P_sub=np.full((g, g), 1.0 / g),
+                grad_lanes=lanes, restart_lanes=lanes,
+                edges=np.stack([widx[iu], widx[ju]], axis=1) if g > 1
+                else _EMPTY_EDGES,
                 # ring partial all-reduce: 2·(g−1)/g vector-copies per member
                 param_copies_sent=2 * (g - 1),
             )
@@ -162,7 +336,7 @@ class PragueScheduler(Scheduler):
             del groups[gid], ready[gid]
 
 
-class AGPScheduler(Scheduler):
+class AGPScheduler(_SingleEdgeScheduler):
     """Asynchronous Gradient Push [Assran & Rabbat 2020].
 
     Push-sum on a directed view of the graph: a finishing worker applies its
@@ -176,43 +350,17 @@ class AGPScheduler(Scheduler):
 
     name = "agp"
 
-    def __init__(self, graph: Graph, straggler: StragglerModel, seed: int = 3):
-        super().__init__(graph, straggler)
-        self._rng = np.random.default_rng(seed)
+    def __init__(self, graph: Graph, straggler: StragglerModel, seed: int = 3,
+                 horizon: Optional[int] = None):
+        super().__init__(graph, straggler, seed=seed, horizon=horizon)
 
-    def edge_bound(self) -> int:
-        return 1  # one directed push per event
-
-    def active_bound(self) -> int:
-        return 2  # the pusher and its chosen out-neighbor
-
-    def events(self) -> Iterator[ScheduleEvent]:
-        n = self.n
-        heap: List[Tuple[float, int]] = []
-        for i, dt in enumerate(self.sampler.sample_batch(np.arange(n))):
-            heapq.heappush(heap, (dt, i))
-        k = 0
-        while True:
-            t, i = heapq.heappop(heap)
-            nbrs = self.graph.neighbors(i)
-            P = np.eye(n)
-            edges: Tuple[Tuple[int, int], ...] = ()
-            copies = 0
-            if len(nbrs):
-                r = int(self._rng.choice(nbrs))
-                # sender i's ROW splits its mass between i and r
-                P[i, i] = 0.5
-                P[i, r] = 0.5
-                edges = ((min(i, r), max(i, r)),)
-                copies = 1  # one directed push
-            yield ScheduleEvent(
-                k=k, time=t,
-                grad_workers=self._mask([i]),
-                restart_workers=self._mask([i]),
-                P=P, active_edges=edges, param_copies_sent=copies,
-            )
-            k += 1
-            heapq.heappush(heap, (t + self.sampler.sample(i), i))
+    def _pair_payload(self, i: int, r: int):
+        # sender i's ROW splits its mass between i and r; one directed push
+        if i < r:
+            return (np.array((i, r), dtype=np.int32), _P_PUSH_FIRST,
+                    _LANE_FIRST, 1)
+        return (np.array((r, i), dtype=np.int32), _P_PUSH_SECOND,
+                _LANE_SECOND, 1)
 
 
 def make_scheduler(name: str, graph: Graph, straggler: StragglerModel, **kw) -> Scheduler:

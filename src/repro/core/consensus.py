@@ -43,6 +43,31 @@ def metropolis_matrix(n: int, active_edges: Iterable[Edge]) -> np.ndarray:
     return P
 
 
+def metropolis_submatrix(n: int, workers: np.ndarray,
+                         sub_adj: np.ndarray) -> np.ndarray:
+    """Active-set restriction of :func:`metropolis_matrix`, built at O(m·n).
+
+    ``workers`` is the sorted (m,) global index set and ``sub_adj`` the (m, m)
+    boolean active-edge adjacency *among those workers* (symmetric, zero
+    diagonal).  Returns exactly ``metropolis_matrix(n, edges)[np.ix_(workers,
+    workers)]`` — bit-identical, not merely close — without materializing the
+    (n, n) matrix: off-diagonal weights depend only on active degrees, and the
+    diagonal ``1 − Σ_j P_ij`` is summed over a scattered length-``n`` scratch
+    row so the floating-point reduction tree matches the dense build's
+    ``P.sum(axis=1)`` (numpy's pairwise summation is position-dependent;
+    summing the compact row instead would drift in the last ulp).
+    """
+    m = len(workers)
+    deg = sub_adj.sum(axis=1)
+    P = np.zeros((m, m), dtype=np.float64)
+    ii, jj = np.nonzero(sub_adj)
+    P[ii, jj] = 1.0 / (1.0 + np.maximum(deg[ii], deg[jj]))
+    scratch = np.zeros((m, n))
+    scratch[np.arange(m)[:, None], np.asarray(workers)[None, :]] = P
+    np.fill_diagonal(P, 1.0 - scratch.sum(axis=1))
+    return P
+
+
 def is_doubly_stochastic(P: np.ndarray, tol: float = 1e-9) -> bool:
     return (
         bool(np.all(P >= -tol))

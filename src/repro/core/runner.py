@@ -22,11 +22,12 @@ Execution model — block-compiled by default (``mode="scan"``):
   fall back to the dense scan.
 - Per-worker batches come from a pre-drawn on-device sample pool indexed by
   a restart counter the scan carries.  By default the pool is sized from the
-  first run's ``max_events`` bound (capped at 1024), which guarantees exact
-  per-event sampling semantics; pass ``batch_pool`` to fix the size
-  explicitly.  The pointer wraps modulo the pool, so runs with more restarts
-  per worker than the pool revisit samples cyclically — a warning is issued
-  once if that happens.
+  first run's bound — ``max_events`` directly, or a ``max_time`` bound via a
+  restarts-per-worker estimate (``2·max_time / min base time``), both capped
+  at 1024 — which guarantees exact per-event sampling semantics; pass
+  ``batch_pool`` to fix the size explicitly.  The pointer wraps modulo the
+  pool, so runs with more restarts per worker than the pool revisit samples
+  cyclically — a warning is issued once if that happens.
 - Evaluation fires every ``eval_every`` events; block boundaries are snapped
   to the eval grid and truncated blocks are padded with no-op events, so a
   single compiled program serves the whole run and the recorded history
@@ -165,8 +166,8 @@ class DecentralizedTrainer:
         self._draw_count[worker] += 1
         return b
 
-    def _refresh_batches(self, restart_mask: np.ndarray) -> None:
-        idx = np.nonzero(restart_mask)[0]
+    def _refresh_batches(self, idx: np.ndarray) -> None:
+        """Redraw the batches of the workers in ``idx`` (restarted lanes)."""
         if len(idx) == 0:
             return
         new = {int(i): self._draw(int(i)) for i in idx}
@@ -184,13 +185,32 @@ class DecentralizedTrainer:
         self._batches = jax.tree.unflatten(treedef, new_leaves)
 
     # -- scan-mode state ---------------------------------------------------
-    def _ensure_pools(self, max_events: Optional[int] = None):
+    def _estimate_restarts(self, max_time: float) -> int:
+        """Upper-bound restarts/worker for a ``max_time``-bounded run.
+
+        A worker restarts at most once per completed local computation, and
+        the fastest worker's completions take at least its base time shrunk
+        by jitter's low tail — 2× headroom covers both that tail and any
+        scheduler that restarts on someone else's clock.  Without this a
+        long ``max_time`` run fell back to a 64-draw pool and silently
+        revisited samples (the wrap warning below remains the backstop).
+        """
+        base = np.min(self.scheduler.sampler.base)
+        return int(np.ceil(2.0 * max_time / max(float(base), 1e-9)))
+
+    def _ensure_pools(self, max_events: Optional[int] = None,
+                      max_time: Optional[float] = None):
         # Restarts per worker are bounded by total events, so a pool of
-        # max_events draws never wraps; explicit batch_pool overrides.
+        # max_events draws never wraps; a max_time bound is converted into
+        # a restart estimate; explicit batch_pool overrides both.
         if self.batch_pool is not None:
             pool_len = self.batch_pool
+        elif max_events:
+            pool_len = min(max_events, 1024)
+        elif max_time is not None:
+            pool_len = max(64, min(self._estimate_restarts(max_time), 1024))
         else:
-            pool_len = min(max_events, 1024) if max_events else 64
+            pool_len = 64
         if self._pools is not None and self._pool_len >= pool_len:
             return
         # pool[i, s] = the s-th batch worker i would draw — identical to
@@ -208,16 +228,18 @@ class DecentralizedTrainer:
         if self._ptr is None:
             self._ptr = jnp.zeros((self.n,), dtype=jnp.int32)
 
-    def _ensure_scan(self, max_events: Optional[int] = None):
+    def _ensure_scan(self, max_events: Optional[int] = None,
+                     max_time: Optional[float] = None):
         if self._scan is None:
             self._scan = build_event_scan(self.loss_fn, use_kernel=self.use_kernel)
-        self._ensure_pools(max_events)
+        self._ensure_pools(max_events, max_time)
 
-    def _ensure_sparse(self, max_events: Optional[int] = None):
+    def _ensure_sparse(self, max_events: Optional[int] = None,
+                       max_time: Optional[float] = None):
         if self._sparse is None:
             self._sparse = build_sparse_event_scan(
                 self.loss_fn, use_kernel=self.use_kernel)
-        self._ensure_pools(max_events)
+        self._ensure_pools(max_events, max_time)
 
     def _etas_for(self, batch_E: int, valid_E: int, rounds: int) -> np.ndarray:
         etas = self.eta0 * self.eta_decay ** (
@@ -346,7 +368,7 @@ class DecentralizedTrainer:
                 jnp.asarray(ev.grad_workers), jnp.asarray(ev.restart_workers),
                 eta,
             )
-            self._refresh_batches(ev.restart_workers)
+            self._refresh_batches(ev.workers[ev.restart_lanes])
             rounds += 1
             if rounds % eval_every == 0:
                 loss, metric = self._eval_now()
@@ -360,10 +382,10 @@ class DecentralizedTrainer:
     def _run_scan(self, max_events, max_time, eval_every,
                   sparse: bool = False) -> RunResult:
         if sparse:
-            self._ensure_sparse(max_events)
+            self._ensure_sparse(max_events, max_time)
             abound = self.scheduler.active_bound()
         else:
-            self._ensure_scan(max_events)
+            self._ensure_scan(max_events, max_time)
         self._ensure_eval_accum()
         bound = self.scheduler.edge_bound()
         # With eval_every < block_size every chunk is exactly eval_every
@@ -492,10 +514,12 @@ class DecentralizedTrainer:
 def _identity_event(n: int):
     from repro.core.scheduler import ScheduleEvent
     return ScheduleEvent(
-        k=0, time=0.0,
-        grad_workers=np.zeros(n, dtype=bool),
-        restart_workers=np.zeros(n, dtype=bool),
-        P=np.eye(n, dtype=np.float32), active_edges=(), param_copies_sent=0)
+        k=0, time=0.0, n=n,
+        workers=np.zeros(0, dtype=np.int32),
+        P_sub=np.zeros((0, 0), dtype=np.float32),
+        grad_lanes=np.zeros(0, dtype=bool),
+        restart_lanes=np.zeros(0, dtype=bool),
+        edges=np.zeros((0, 2), dtype=np.int32), param_copies_sent=0)
 
 
 def run_algorithms(

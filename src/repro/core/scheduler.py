@@ -13,16 +13,28 @@ The *ordering* of events — not their wall-clock overlap — determines every
 worker's view of its neighbors' parameters, so parameter trajectories are
 faithful to a real asynchronous cluster under the same straggler draws.
 
+Events are **sparse-native**: a :class:`ScheduleEvent`'s primary payload is
+the sorted active-worker set plus the A×A consensus submatrix restricted to
+it (every scheduler keeps P identity outside the set — the invariant
+tests/test_scheduler.py pins), so generating an event costs O(A²) host work
+instead of the O(n²) a dense consensus matrix would. Dense views (``.P``,
+``.grad_workers``, ``.restart_workers``) materialize lazily, only where a
+consumer actually asks — the per-event interpreter, dense
+:class:`EventBatch` packing, diagnostics.
+
 Events are consumed one at a time (:meth:`Scheduler.events`, the legacy
 interpreted path), packed into dense :class:`EventBatch` stacked arrays
 that replay inside a single compiled ``lax.scan``, or packed into
 :class:`SparseEventBatch` active-set arrays for the gather-compute-scatter
 scan — the representation that makes paper-scale N=128/256 streams
 affordable (a single-edge event carries a 2×2 submatrix instead of an
-n×n one).  The runner packs blocks itself via the ``from_events``
-classmethods (its chunking snaps to the eval grid and the run bounds);
-:meth:`Scheduler.event_batches` / :meth:`Scheduler.sparse_event_batches`
-are the standalone fixed-size packing APIs for benchmarks and diagnostics.
+n×n one).  Both ``from_events`` packers are vectorized numpy batch
+scatters (no per-event Python loop over ``np.ix_`` rectangles), so packing
+keeps up with the sparse-native generators.  The runner packs blocks
+itself via the ``from_events`` classmethods (its chunking snaps to the
+eval grid and the run bounds); :meth:`Scheduler.event_batches` /
+:meth:`Scheduler.sparse_event_batches` are the standalone fixed-size
+packing APIs for benchmarks and diagnostics.
 
 Staleness semantics: a worker's gradient is evaluated at the parameter
 *snapshot it held when it started computing* (``restart_workers`` marks where
@@ -39,28 +51,189 @@ from typing import Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.consensus import metropolis_matrix
+from repro.core.consensus import metropolis_matrix, metropolis_submatrix
 from repro.core.pathsearch import PathSearchState
 from repro.core.straggler import StragglerModel, TimeSampler
 from repro.core.topology import Graph
 
 Edge = Tuple[int, int]
 
+_EMPTY_EDGES = np.zeros((0, 2), dtype=np.int32)
+_EMPTY_EDGES.flags.writeable = False  # shared across events: keep it inert
 
-@dataclasses.dataclass(frozen=True)
+
 class ScheduleEvent:
-    """One asynchronous iteration of the compact update."""
-    k: int                       # iteration counter (the paper's virtual counter)
-    time: float                  # virtual clock at which the iteration completes
-    grad_workers: np.ndarray     # bool (n,): workers whose local gradient applies
-    restart_workers: np.ndarray  # bool (n,): workers that re-snapshot and restart
-    P: np.ndarray                # (n, n) consensus matrix (doubly or column stochastic)
-    active_edges: Tuple[Edge, ...]
-    param_copies_sent: int       # parameter-vector copies moved this iteration
+    """One asynchronous iteration of the compact update, in active-set form.
+
+    Primary payload (what schedulers construct, what the sparse packer
+    reads — all O(A) / O(A²), never O(n)):
+
+    - ``workers``: (m,) int32, the *sorted* set of workers this iteration
+      touches (gradient, restart, or an active edge);
+    - ``P_sub``: (m, m) float, the consensus matrix restricted to that set —
+      P is identity outside it by the schedulers' construction;
+    - ``grad_lanes`` / ``restart_lanes``: (m,) bool, aligned with
+      ``workers``;
+    - ``edges``: (e, 2) int32 active-edge endpoints (global indices).
+
+    Dense views — ``.P`` (n, n), ``.grad_workers`` / ``.restart_workers``
+    (n,) bool, ``.active_edges`` tuple-of-pairs — are materialized lazily on
+    first access and cached, so consumers that never ask (the sparse scan
+    path, the generation benchmarks) never pay for them.  ``.P`` scatters
+    ``P_sub`` into an identity matrix, which reproduces the historical dense
+    build bit-exactly (see :func:`repro.core.consensus.metropolis_submatrix`
+    for why the submatrices themselves are exact).
+    """
+
+    __slots__ = ("k", "time", "n", "workers", "P_sub", "grad_lanes",
+                 "restart_lanes", "edges", "param_copies_sent",
+                 "_P", "_gw", "_rw", "_ae")
+
+    def __init__(self, k: int, time: float, n: int, workers: np.ndarray,
+                 P_sub: np.ndarray, grad_lanes: np.ndarray,
+                 restart_lanes: np.ndarray, edges: np.ndarray,
+                 param_copies_sent: int,
+                 dense_P: Optional[np.ndarray] = None,
+                 dense_grad: Optional[np.ndarray] = None,
+                 dense_restart: Optional[np.ndarray] = None):
+        self.k = k
+        self.time = time
+        self.n = n
+        self.workers = workers
+        self.P_sub = P_sub
+        self.grad_lanes = grad_lanes
+        self.restart_lanes = restart_lanes
+        self.edges = edges
+        self.param_copies_sent = param_copies_sent
+        self._P = dense_P
+        self._gw = dense_grad
+        self._rw = dense_restart
+        self._ae = None
+
+    @classmethod
+    def from_dense(cls, k: int, time: float, grad_workers: np.ndarray,
+                   restart_workers: np.ndarray, P: np.ndarray,
+                   active_edges: Sequence[Edge],
+                   param_copies_sent: int) -> "ScheduleEvent":
+        """Build from the dense representation (custom schedulers, round
+        trips).  The active set is the union of gradient workers, restarting
+        workers, and active-edge endpoints; P must be identity outside it.
+        The dense arrays are kept as the event's cached views, so round
+        trips through this constructor are exact.
+        """
+        n = len(grad_workers)
+        gw = np.asarray(grad_workers, dtype=bool)
+        rw = np.asarray(restart_workers, dtype=bool)
+        active = gw | rw
+        edges = (np.asarray(active_edges, dtype=np.int32).reshape(-1, 2)
+                 if len(active_edges) else _EMPTY_EDGES)
+        if edges.size:
+            active = active.copy()
+            active[edges.ravel()] = True
+        widx = np.nonzero(active)[0].astype(np.int32)
+        return cls(
+            k=k, time=time, n=n, workers=widx,
+            P_sub=P[np.ix_(widx, widx)],
+            grad_lanes=gw[widx], restart_lanes=rw[widx],
+            edges=edges, param_copies_sent=param_copies_sent,
+            dense_P=P, dense_grad=gw, dense_restart=rw,
+        )
+
+    # -- lazy dense views --------------------------------------------------
+    @property
+    def P(self) -> np.ndarray:
+        """Dense (n, n) consensus matrix: identity off the active set."""
+        if self._P is None:
+            P = np.eye(self.n, dtype=self.P_sub.dtype
+                       if self.P_sub.size else np.float64)
+            if self.workers.size:
+                P[np.ix_(self.workers, self.workers)] = self.P_sub
+            self._P = P
+        return self._P
+
+    @property
+    def grad_workers(self) -> np.ndarray:
+        """Dense (n,) bool: workers whose local gradient applies."""
+        if self._gw is None:
+            gw = np.zeros(self.n, dtype=bool)
+            gw[self.workers[self.grad_lanes]] = True
+            self._gw = gw
+        return self._gw
+
+    @property
+    def restart_workers(self) -> np.ndarray:
+        """Dense (n,) bool: workers that re-snapshot and restart."""
+        if self._rw is None:
+            rw = np.zeros(self.n, dtype=bool)
+            rw[self.workers[self.restart_lanes]] = True
+            self._rw = rw
+        return self._rw
+
+    @property
+    def active_edges(self) -> Tuple[Edge, ...]:
+        if self._ae is None:
+            self._ae = tuple((int(a), int(b)) for a, b in self.edges)
+        return self._ae
 
     @property
     def n_active(self) -> int:
-        return int(self.grad_workers.sum())
+        return int(self.grad_lanes.sum())
+
+    def __repr__(self) -> str:  # slots class: give diagnostics a readable form
+        return (f"ScheduleEvent(k={self.k}, time={self.time:.4f}, "
+                f"n={self.n}, workers={self.workers.tolist()}, "
+                f"edges={self.active_edges}, "
+                f"copies={self.param_copies_sent})")
+
+
+def _ragged_arange(lens: np.ndarray) -> np.ndarray:
+    """[0..lens[0]), [0..lens[1]), ... concatenated (vectorized)."""
+    total = int(lens.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    starts = np.cumsum(lens) - lens
+    return np.arange(total, dtype=np.int64) - np.repeat(starts, lens)
+
+
+def _pack_edges(events: Sequence["ScheduleEvent"],
+                edge_bound: Optional[int]) -> Tuple[np.ndarray, np.ndarray]:
+    """Compact active-edge arrays: (E, width, 2) int32 -1-padded + counts."""
+    E = len(events)
+    elens = np.fromiter((len(ev.edges) for ev in events),
+                        dtype=np.int64, count=E)
+    width = edge_bound if edge_bound is not None else max(1, int(elens.max()))
+    if elens.max(initial=0) > width:
+        bad = int(np.argmax(elens))
+        raise ValueError(
+            f"event {events[bad].k} has {int(elens[bad])} active edges > "
+            f"edge_bound {width}")
+    edges = np.full((E, width, 2), -1, dtype=np.int32)
+    if int(elens.sum()):
+        rows = np.repeat(np.arange(E), elens)
+        cols = _ragged_arange(elens)
+        edges[rows, cols] = np.concatenate(
+            [ev.edges for ev in events if len(ev.edges)])
+    return edges, elens.astype(np.int32)
+
+
+def _worker_scatter_indices(wlens: np.ndarray, flat_workers: np.ndarray):
+    """Batch-scatter indices for the (E, A, A) submatrix blocks.
+
+    Returns ``(bi, lr, lc, gr, gc)``: for every entry of every event's
+    m_e×m_e submatrix (row-major), the event index, local row/col within the
+    block, and the global worker indices at those lanes.
+    """
+    E = len(wlens)
+    m2 = wlens * wlens
+    bi = np.repeat(np.arange(E), m2)
+    mrep = np.repeat(wlens, m2)
+    within = _ragged_arange(m2)
+    lr = within // np.maximum(mrep, 1)
+    lc = within - lr * mrep
+    starts = np.repeat(np.cumsum(wlens) - wlens, m2)
+    gr = flat_workers[starts + lr]
+    gc = flat_workers[starts + lc]
+    return bi, lr, lc, gr, gc
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,10 +246,13 @@ class EventBatch:
     instead of dispatching one jitted step per event from Python.  The dense
     ``P`` stack feeds the update; ``edges``/``n_edges`` are the compact
     active-edge form — fixed width per scheduler (``Scheduler.edge_bound``),
-    ``-1``-padded — kept for diagnostics and communication accounting.  For
-    the representation that drops the dense stack entirely, see
-    :class:`SparseEventBatch` (most baselines touch 1 edge out of O(n²)
-    entries; the sparse form carries only the active-set submatrices).
+    ``-1``-padded — kept for diagnostics and communication accounting.
+    Packing never materializes per-event dense matrices: the stack is one
+    broadcast identity plus one vectorized scatter of the events' active-set
+    submatrices.  For the representation that drops the dense stack
+    entirely, see :class:`SparseEventBatch` (most baselines touch 1 edge out
+    of O(n²) entries; the sparse form carries only the active-set
+    submatrices).
     """
     k0: int                         # iteration counter of the first event
     times: np.ndarray               # (E,) float64 virtual completion clocks
@@ -104,27 +280,34 @@ class EventBatch:
                     edge_bound: Optional[int] = None) -> "EventBatch":
         if not events:
             raise ValueError("cannot pack an empty event block")
-        n = events[0].P.shape[0]
-        width = edge_bound if edge_bound is not None else max(
-            1, max(len(ev.active_edges) for ev in events))
-        edges = np.full((len(events), width, 2), -1, dtype=np.int32)
-        n_edges = np.zeros(len(events), dtype=np.int32)
-        for e, ev in enumerate(events):
-            m = len(ev.active_edges)
-            if m > width:
-                raise ValueError(
-                    f"event {ev.k} has {m} active edges > edge_bound {width}")
-            if m:
-                edges[e, :m] = np.asarray(ev.active_edges, dtype=np.int32)
-            n_edges[e] = m
+        n = events[0].n
+        E = len(events)
+        edges, n_edges = _pack_edges(events, edge_bound)
+        wlens = np.fromiter((len(ev.workers) for ev in events),
+                            dtype=np.int64, count=E)
+        flatw = (np.concatenate([ev.workers for ev in events if
+                                 len(ev.workers)])
+                 if int(wlens.sum()) else np.zeros(0, dtype=np.int32))
+        P = np.broadcast_to(np.eye(n, dtype=np.float32), (E, n, n)).copy()
+        gm = np.zeros((E, n), dtype=bool)
+        rm = np.zeros((E, n), dtype=bool)
+        if flatw.size:
+            bi, _, _, gr, gc = _worker_scatter_indices(wlens, flatw)
+            P[bi, gr, gc] = np.concatenate(
+                [ev.P_sub.ravel() for ev in events if len(ev.workers)])
+            rows = np.repeat(np.arange(E), wlens)
+            gm[rows, flatw] = np.concatenate(
+                [ev.grad_lanes for ev in events if len(ev.workers)])
+            rm[rows, flatw] = np.concatenate(
+                [ev.restart_lanes for ev in events if len(ev.workers)])
         return cls(
             k0=events[0].k,
-            times=np.asarray([ev.time for ev in events], dtype=np.float64),
-            P=np.stack([ev.P for ev in events]).astype(np.float32),
-            grad_workers=np.stack([ev.grad_workers for ev in events]),
-            restart_workers=np.stack([ev.restart_workers for ev in events]),
-            param_copies_sent=np.asarray(
-                [ev.param_copies_sent for ev in events], dtype=np.int64),
+            times=np.fromiter((ev.time for ev in events),
+                              dtype=np.float64, count=E),
+            P=P, grad_workers=gm, restart_workers=rm,
+            param_copies_sent=np.fromiter(
+                (ev.param_copies_sent for ev in events),
+                dtype=np.int64, count=E),
             edges=edges, n_edges=n_edges,
         )
 
@@ -165,12 +348,12 @@ class EventBatch:
         out = []
         for e in range(self.E):
             m = int(self.n_edges[e])
-            out.append(ScheduleEvent(
+            out.append(ScheduleEvent.from_dense(
                 k=self.k0 + e, time=float(self.times[e]),
                 grad_workers=self.grad_workers[e],
                 restart_workers=self.restart_workers[e],
                 P=self.P[e],
-                active_edges=tuple(map(tuple, self.edges[e, :m])),
+                active_edges=self.edges[e, :m],
                 param_copies_sent=int(self.param_copies_sent[e]),
             ))
         return out
@@ -188,7 +371,10 @@ class SparseEventBatch:
     active set (the invariant tests/test_scheduler.py pins), so the submatrix
     plus the index list reconstruct the event exactly — at O(A²) packed
     bytes per event instead of O(n²), which is what drops the dense ``P``
-    stack entirely for single-edge schedulers (A = 2 vs n = 256).
+    stack entirely for single-edge schedulers (A = 2 vs n = 256).  Since
+    events are sparse-native, packing is a pure reshape: one vectorized
+    batch scatter of the events' lanes and submatrices into the padded
+    arrays, no per-event Python work.
 
     Lane padding: ``workers`` rows are ``-1``-padded to the scheduler's fixed
     ``active_bound`` ``A`` (stable shapes ⇒ one compiled scan for the run);
@@ -231,48 +417,41 @@ class SparseEventBatch:
         if not events:
             raise ValueError("cannot pack an empty event block")
         A = max(1, active_bound)
-        ewidth = edge_bound if edge_bound is not None else max(
-            1, max(len(ev.active_edges) for ev in events))
         E = len(events)
+        wlens = np.fromiter((len(ev.workers) for ev in events),
+                            dtype=np.int64, count=E)
+        if wlens.max(initial=0) > A:
+            bad = int(np.argmax(wlens))
+            raise ValueError(
+                f"event {events[bad].k} touches {int(wlens[bad])} workers > "
+                f"active_bound {A}")
         workers = np.full((E, A), -1, dtype=np.int32)
-        n_workers = np.zeros(E, dtype=np.int32)
         P_sub = np.zeros((E, A, A), dtype=np.float32)
         gm = np.zeros((E, A), dtype=bool)
         rm = np.zeros((E, A), dtype=bool)
-        edges = np.full((E, ewidth, 2), -1, dtype=np.int32)
-        n_edges = np.zeros(E, dtype=np.int32)
-        for e, ev in enumerate(events):
-            active = set(np.nonzero(ev.grad_workers)[0].tolist())
-            active |= set(np.nonzero(ev.restart_workers)[0].tolist())
-            for a, b in ev.active_edges:
-                active.add(int(a))
-                active.add(int(b))
-            w = sorted(active)
-            m = len(w)
-            if m > A:
-                raise ValueError(
-                    f"event {ev.k} touches {m} workers > active_bound {A}")
-            if m:
-                idx = np.asarray(w, dtype=np.intp)
-                workers[e, :m] = idx
-                P_sub[e, :m, :m] = ev.P[np.ix_(idx, idx)]
-                gm[e, :m] = ev.grad_workers[idx]
-                rm[e, :m] = ev.restart_workers[idx]
-            n_workers[e] = m
-            me = len(ev.active_edges)
-            if me > ewidth:
-                raise ValueError(
-                    f"event {ev.k} has {me} active edges > edge_bound {ewidth}")
-            if me:
-                edges[e, :me] = np.asarray(ev.active_edges, dtype=np.int32)
-            n_edges[e] = me
+        if int(wlens.sum()):
+            nonempty = [ev for ev in events if len(ev.workers)]
+            flatw = np.concatenate([ev.workers for ev in nonempty])
+            rows = np.repeat(np.arange(E), wlens)
+            cols = _ragged_arange(wlens)
+            workers[rows, cols] = flatw
+            gm[rows, cols] = np.concatenate(
+                [ev.grad_lanes for ev in nonempty])
+            rm[rows, cols] = np.concatenate(
+                [ev.restart_lanes for ev in nonempty])
+            bi, lr, lc, _, _ = _worker_scatter_indices(wlens, flatw)
+            P_sub[bi, lr, lc] = np.concatenate(
+                [ev.P_sub.ravel() for ev in nonempty])
+        edges, n_edges = _pack_edges(events, edge_bound)
         return cls(
             k0=events[0].k,
-            times=np.asarray([ev.time for ev in events], dtype=np.float64),
-            workers=workers, n_workers=n_workers, P_sub=P_sub,
+            times=np.fromiter((ev.time for ev in events),
+                              dtype=np.float64, count=E),
+            workers=workers, n_workers=wlens.astype(np.int32), P_sub=P_sub,
             grad_workers=gm, restart_workers=rm,
-            param_copies_sent=np.asarray(
-                [ev.param_copies_sent for ev in events], dtype=np.int64),
+            param_copies_sent=np.fromiter(
+                (ev.param_copies_sent for ev in events),
+                dtype=np.int64, count=E),
             edges=edges, n_edges=n_edges,
         )
 
@@ -311,22 +490,23 @@ class SparseEventBatch:
         )
 
     def to_events(self, n: int) -> List[ScheduleEvent]:
-        """Reconstruct dense per-event form (round-trip/diagnostic helper)."""
+        """Reconstruct per-event form (round-trip/diagnostic helper).
+
+        The returned events are sparse-native views of the packed lanes;
+        their dense ``.P`` (an identity with the float32 submatrix scattered
+        in) materializes lazily like any other event's.
+        """
         out = []
         for e in range(self.E):
             m = int(self.n_workers[e])
-            idx = self.workers[e, :m].astype(np.intp)
-            gw = np.zeros(n, dtype=bool)
-            rw = np.zeros(n, dtype=bool)
-            gw[idx] = self.grad_workers[e, :m]
-            rw[idx] = self.restart_workers[e, :m]
-            P = np.eye(n, dtype=np.float32)
-            P[np.ix_(idx, idx)] = self.P_sub[e, :m, :m]
             me = int(self.n_edges[e])
             out.append(ScheduleEvent(
-                k=self.k0 + e, time=float(self.times[e]),
-                grad_workers=gw, restart_workers=rw, P=P,
-                active_edges=tuple(map(tuple, self.edges[e, :me])),
+                k=self.k0 + e, time=float(self.times[e]), n=n,
+                workers=self.workers[e, :m],
+                P_sub=self.P_sub[e, :m, :m],
+                grad_lanes=self.grad_workers[e, :m],
+                restart_lanes=self.restart_workers[e, :m],
+                edges=self.edges[e, :me],
                 param_copies_sent=int(self.param_copies_sent[e]),
             ))
         return out
@@ -430,39 +610,48 @@ class AAUScheduler(Scheduler):
 
     def events(self) -> Iterator[ScheduleEvent]:
         n = self.n
+        adj = self.graph.adj
         ps = PathSearchState(self.graph)
+        sample_batch = self.sampler.sample_batch
         heap: List[Tuple[float, int]] = []
-        for i, dt in enumerate(self.sampler.sample_batch(np.arange(n))):
+        for i, dt in enumerate(sample_batch(np.arange(n))):
             heapq.heappush(heap, (dt, i))
         finished: set = set()
         k = 0
         while True:
             t, i = heapq.heappop(heap)
             finished.add(i)
-            novel = ps.novel_edges(finished)
-            if n == 1:
-                novel = [(0, 0)]  # degenerate single-worker case: every finish fires
-            if not novel:
-                continue
             if n > 1:
+                # One O(deg) neighborhood scan per worker finish instead of
+                # an O(|finished|²) rescan: between commits the component
+                # partition is frozen and earlier finishes found nothing, so
+                # the committable set is exactly the edges incident to the
+                # newest finisher (PathSearchState.novel_edges_incident).
+                novel = ps.novel_edges_incident(i, finished)
+                if not novel:
+                    continue
                 ps.commit(novel)
-            # All finished workers exchange with their finished graph-neighbors.
+            # degenerate single-worker case (n == 1): every finish fires
+            # All finished workers exchange with their finished graph-neighbors:
+            # the event is the finished clique's Metropolis mixing, built as an
+            # m×m submatrix — the dense (n, n) matrix never exists here.
             fin = sorted(finished)
-            active_edges = tuple(
-                (a, b) for ai, a in enumerate(fin) for b in fin[ai + 1:]
-                if self.graph.adj[a, b]
-            )
-            P = metropolis_matrix(n, active_edges)
-            mask = self._mask(finished)
+            widx = np.asarray(fin, dtype=np.int32)
+            sub_adj = adj[np.ix_(widx, widx)]
+            er, ec = np.nonzero(np.triu(sub_adj, k=1))
+            edges = np.stack([widx[er], widx[ec]], axis=1) if er.size \
+                else _EMPTY_EDGES
+            lanes = np.ones(len(fin), dtype=bool)
             yield ScheduleEvent(
-                k=k, time=t, grad_workers=mask, restart_workers=mask, P=P,
-                active_edges=active_edges,
-                param_copies_sent=2 * len(active_edges),
+                k=k, time=t, n=n, workers=widx,
+                P_sub=metropolis_submatrix(n, widx, sub_adj),
+                grad_lanes=lanes, restart_lanes=lanes,
+                edges=edges, param_copies_sent=2 * len(edges),
             )
             k += 1
             # batch-draw the restarted workers' next completion times: one
             # vectorized RNG call instead of one heap-push-sized draw each
-            for j, dt in zip(fin, self.sampler.sample_batch(fin)):
+            for j, dt in zip(fin, sample_batch(fin)):
                 heapq.heappush(heap, (t + dt, j))
             finished.clear()
             if n > 1 and ps.epoch_complete():
@@ -481,15 +670,26 @@ class SyncScheduler(Scheduler):
 
     def events(self) -> Iterator[ScheduleEvent]:
         n = self.n
-        edges = self.graph.edges
-        P = metropolis_matrix(n, edges)
-        mask = np.ones(n, dtype=bool)
+        edge_list = self.graph.edges
+        # The barrier mixes the whole static graph every iteration: one dense
+        # Metropolis build up front, shared by every event (m = n, so the
+        # "submatrix" is the full matrix and the dense view is pre-cached).
+        P = metropolis_matrix(n, edge_list)
+        workers = np.arange(n, dtype=np.int32)
+        edges = (np.asarray(edge_list, dtype=np.int32).reshape(-1, 2)
+                 if edge_list else _EMPTY_EDGES)
         t = 0.0
         k = 0
         while True:
             t += float(self.sampler.sample_all().max())  # barrier: slowest worker
+            # independent mask copies per role (a consumer mutating one view
+            # must not flip the other); P is shared across events as before
+            gl = np.ones(n, dtype=bool)
+            rl = np.ones(n, dtype=bool)
             yield ScheduleEvent(
-                k=k, time=t, grad_workers=mask.copy(), restart_workers=mask.copy(),
-                P=P, active_edges=edges, param_copies_sent=2 * len(edges),
+                k=k, time=t, n=n, workers=workers, P_sub=P,
+                grad_lanes=gl, restart_lanes=rl, edges=edges,
+                param_copies_sent=2 * len(edge_list),
+                dense_P=P, dense_grad=gl, dense_restart=rl,
             )
             k += 1

@@ -69,5 +69,26 @@ class TimeSampler:
                      t * m.slowdown, t)
         return t
 
+    def sample_horizon(self, k: int) -> np.ndarray:
+        """K future duration *factors* drawn at once (event-horizon batching).
+
+        Returns (k,) multiplicative factors — jitter × straggler slowdown —
+        to be applied to per-worker base times as completions are assigned:
+        ``duration_j = base[worker_j] * factors[j]``.  The distribution of
+        each factor is identical to one ``sample()`` draw, but the generator
+        stream is consumed as one lognormal(k) then one uniform(k) vector
+        call instead of k interleaved scalar pairs, so the resulting event
+        stream is a *different* (equally valid, fully deterministic)
+        realization than the per-event one — see the ``horizon`` option on
+        the single-edge schedulers in core/baselines.py for the trade-off.
+        """
+        m = self.model
+        if m.jitter > 0:
+            f = self._rng.lognormal(mean=0.0, sigma=m.jitter, size=k)
+        else:
+            f = np.ones(k)
+        return np.where(self._rng.random(k) < m.straggler_prob,
+                        f * m.slowdown, f)
+
     def sample_all(self) -> np.ndarray:
         return self.sample_batch(np.arange(self.model.n))

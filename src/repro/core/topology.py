@@ -12,6 +12,7 @@ matching the paper's N_j = {i | (i,j) in E} ∪ {j}).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import FrozenSet, Tuple
 
 import numpy as np
@@ -36,6 +37,16 @@ class Graph:
     def neighbors(self, j: int) -> np.ndarray:
         """Neighbor indices of worker j, excluding j itself."""
         return np.nonzero(self.adj[j])[0]
+
+    @functools.cached_property
+    def neighbor_lists(self) -> Tuple[np.ndarray, ...]:
+        """Per-worker neighbor index arrays, scanned from ``adj`` once.
+
+        The event-generation hot loops (schedulers, Pathsearch) index this
+        per event; recomputing ``neighbors(j)`` there would rescan an
+        adjacency row each time.
+        """
+        return tuple(np.nonzero(self.adj[j])[0] for j in range(self.n))
 
     def degree(self, j: int) -> int:
         return int(self.adj[j].sum())

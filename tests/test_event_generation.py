@@ -1,0 +1,306 @@
+"""Sparse-native event generation: lazy dense views, vectorized packing
+round-trips, the event-horizon batcher, and scheduler edge-case fixes
+(AD-PSGD's isolated-worker lock bug).
+
+The generation layer's contract after the sparse-native refactor:
+
+- schedulers never build an (n, n) matrix per event — events carry the
+  active-worker lanes and the A×A submatrix, and the dense views stay
+  unmaterialized unless a consumer asks;
+- packing events and unpacking them back is *exact* (array-equal, not
+  allclose) in both the sparse and dense batch forms;
+- the optional ``horizon=K`` batcher is deterministic and yields the same
+  trainer trajectories across all three execution modes, while being a
+  different RNG-stream realization than the default per-event draws.
+"""
+import itertools
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.baselines import make_scheduler
+from repro.core.consensus import (is_doubly_stochastic, metropolis_matrix,
+                                  metropolis_submatrix)
+from repro.core.runner import DecentralizedTrainer
+from repro.core.scheduler import EventBatch, SparseEventBatch
+from repro.core.straggler import StragglerModel
+from repro.core.topology import Graph
+from repro.data.synthetic import ClassificationData
+
+N = 8
+DATA = ClassificationData(n_workers=N, d=16, n_classes=4,
+                          samples_per_worker=64, seed=0)
+
+
+def loss_fn(params, batch):
+    logits = batch["x"] @ params["w"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], axis=1))
+
+
+def init_fn(key):
+    return {"w": jax.random.normal(key, (16, 4)) * 0.1}
+
+
+def _sched(alg, seed=0, n=N, **kw):
+    g = topology.erdos_renyi(n, 0.4, seed=3)
+    sm = StragglerModel(n=n, straggler_prob=0.2, slowdown=6.0, seed=seed)
+    return make_scheduler(alg, g, sm, **kw)
+
+
+def _trainer(sched, mode, seed=0, **kw):
+    return DecentralizedTrainer(
+        sched, loss_fn, init_fn,
+        lambda w, s: DATA.batch(w, s, batch_size=8),
+        DATA.eval_batch(64), eta0=0.2, eta_decay=0.99, seed=seed,
+        mode=mode, **kw)
+
+
+def _disconnected_graph():
+    """A 4-worker connected component plus one fully isolated worker."""
+    adj = np.zeros((5, 5), dtype=bool)
+    for a, b in ((0, 1), (1, 2), (0, 2), (2, 3)):
+        adj[a, b] = adj[b, a] = True
+    return Graph(5, adj)
+
+
+class TestSparseNativeEvents:
+    @pytest.mark.parametrize("alg", ["dsgd_aau", "ad_psgd", "prague", "agp"])
+    def test_generation_never_materializes_dense(self, alg):
+        """The hot loop is sparse-native: streaming and packing events leaves
+        every lazy dense view (P, grad_workers, restart_workers) unbuilt."""
+        sched = _sched(alg)
+        evs = list(itertools.islice(sched.events(), 24))
+        SparseEventBatch.from_events(evs, active_bound=sched.active_bound(),
+                                     edge_bound=sched.edge_bound())
+        for ev in evs:
+            assert ev._P is None and ev._gw is None and ev._rw is None
+            assert len(ev.workers) <= sched.active_bound()
+
+    @pytest.mark.parametrize("alg", ["dsgd_aau", "ad_psgd", "prague", "agp"])
+    def test_lanes_consistent_with_dense_views(self, alg):
+        sched = _sched(alg)
+        for ev in itertools.islice(sched.events(), 24):
+            np.testing.assert_array_equal(
+                np.nonzero(ev.grad_workers)[0], ev.workers[ev.grad_lanes])
+            np.testing.assert_array_equal(
+                np.nonzero(ev.restart_workers)[0],
+                ev.workers[ev.restart_lanes])
+            # P is identity off the active set, the submatrix on it
+            P = ev.P
+            np.testing.assert_array_equal(
+                P[np.ix_(ev.workers, ev.workers)], ev.P_sub)
+            off = np.setdiff1d(np.arange(ev.n), ev.workers)
+            np.testing.assert_array_equal(P[np.ix_(off, off)],
+                                          np.eye(len(off)))
+
+    def test_metropolis_submatrix_bit_equals_dense_build(self):
+        rng = np.random.default_rng(0)
+        for _ in range(50):
+            n = int(rng.integers(4, 200))
+            m = int(rng.integers(2, min(10, n)))
+            widx = np.sort(rng.choice(n, size=m, replace=False))
+            sub_adj = np.zeros((m, m), dtype=bool)
+            for i in range(m):
+                for j in range(i + 1, m):
+                    if rng.random() < 0.5:
+                        sub_adj[i, j] = sub_adj[j, i] = True
+            edges = [(int(widx[i]), int(widx[j]))
+                     for i, j in zip(*np.nonzero(np.triu(sub_adj, 1)))]
+            dense = metropolis_matrix(n, edges)[np.ix_(widx, widx)]
+            sub = metropolis_submatrix(n, widx, sub_adj)
+            np.testing.assert_array_equal(sub, dense)  # exact, not allclose
+
+
+class TestPackingRoundTripsExact:
+    """pack → to_events → pack must reproduce every packed array exactly."""
+
+    @pytest.mark.parametrize("alg", ["dsgd_aau", "ad_psgd", "prague", "agp"])
+    def test_sparse_pack_unpack_pack(self, alg):
+        sched = _sched(alg)
+        evs = list(itertools.islice(sched.events(), 16))
+        b1 = SparseEventBatch.from_events(
+            evs, active_bound=sched.active_bound(),
+            edge_bound=sched.edge_bound())
+        b2 = SparseEventBatch.from_events(
+            b1.to_events(N), active_bound=sched.active_bound(),
+            edge_bound=sched.edge_bound())
+        for field in ("times", "workers", "n_workers", "P_sub",
+                      "grad_workers", "restart_workers", "param_copies_sent",
+                      "edges", "n_edges"):
+            np.testing.assert_array_equal(getattr(b1, field),
+                                          getattr(b2, field), err_msg=field)
+        assert b1.k0 == b2.k0
+
+    @pytest.mark.parametrize("alg", ["dsgd_aau", "ad_psgd", "prague", "agp"])
+    def test_dense_pack_unpack_pack(self, alg):
+        sched = _sched(alg)
+        evs = list(itertools.islice(sched.events(), 16))
+        b1 = EventBatch.from_events(evs, edge_bound=sched.edge_bound())
+        b2 = EventBatch.from_events(b1.to_events(),
+                                    edge_bound=sched.edge_bound())
+        for field in ("times", "P", "grad_workers", "restart_workers",
+                      "param_copies_sent", "edges", "n_edges"):
+            np.testing.assert_array_equal(getattr(b1, field),
+                                          getattr(b2, field), err_msg=field)
+
+    def test_dense_stack_matches_lazy_per_event_dense(self):
+        """The vectorized identity+scatter P stack equals stacking each
+        event's lazily-materialized dense matrix."""
+        sched = _sched("dsgd_aau")
+        evs = list(itertools.islice(sched.events(), 12))
+        batch = EventBatch.from_events(evs, edge_bound=sched.edge_bound())
+        ref = np.stack([ev.P for ev in evs]).astype(np.float32)
+        np.testing.assert_array_equal(batch.P, ref)
+
+
+class TestADPSGDIsolatedWorkers:
+    """Regression: a worker with no graph neighbors must not acquire the
+    atomic-averaging lock, pay ``avg_time``, or send copies (it has nobody
+    to average with)."""
+
+    def _events(self, avg_time=0.25, nev=40):
+        g = _disconnected_graph()
+        # deterministic completion times: every local computation takes
+        # exactly base_time, so lock-free behavior is directly readable
+        sm = StragglerModel(n=5, straggler_prob=0.0, slowdown=1.0,
+                            jitter=0.0, seed=0)
+        sched = make_scheduler("ad_psgd", g, sm, avg_time=avg_time)
+        return list(itertools.islice(sched.events(), nev))
+
+    def test_isolated_worker_skips_lock_and_sends_nothing(self):
+        evs = self._events()
+        iso = [ev for ev in evs if 4 in ev.workers]
+        assert iso, "isolated worker must still fire events"
+        for ev in iso:
+            assert ev.workers.tolist() == [4]
+            assert ev.param_copies_sent == 0
+            assert len(ev.edges) == 0
+            np.testing.assert_array_equal(ev.P_sub, np.ones((1, 1)))
+            # completion times are exact multiples of base_time: no avg_time
+            # (0.25·base) was ever added, so no lock was acquired
+            assert float(ev.time) == pytest.approx(round(float(ev.time)))
+
+    def test_connected_component_still_serializes(self):
+        evs = self._events()
+        conn = [ev for ev in evs if 4 not in ev.workers]
+        for ev in conn:
+            assert ev.param_copies_sent == 2
+            assert len(ev.edges) == 1
+        # lock serialization: connected events are avg_time apart and never
+        # earlier than the previous one
+        ts = [float(ev.time) for ev in conn]
+        assert all(t2 - t1 >= 0.25 - 1e-12 for t1, t2 in zip(ts, ts[1:]))
+
+    def test_stream_stays_time_sorted_across_components(self):
+        """Lock-shifted connected events and raw-time isolated events must
+        still come out globally time-sorted (the reorder buffer), otherwise
+        ``max_time``-bounded consumers — which stop at the first event past
+        the bound — would silently drop in-range isolated-worker events."""
+        evs = self._events(avg_time=0.5, nev=60)
+        assert [ev.k for ev in evs] == list(range(60))
+        ts = [float(ev.time) for ev in evs]
+        assert all(b >= a for a, b in zip(ts, ts[1:]))
+        assert any(4 in ev.workers for ev in evs)
+
+    def test_trainer_modes_agree_on_disconnected_graph(self):
+        g = _disconnected_graph()
+        data = ClassificationData(n_workers=5, d=16, n_classes=4,
+                                  samples_per_worker=64, seed=0)
+
+        def mk(mode):
+            sm = StragglerModel(n=5, straggler_prob=0.2, slowdown=6.0, seed=0)
+            return DecentralizedTrainer(
+                make_scheduler("ad_psgd", g, sm), loss_fn, init_fn,
+                lambda w, s: data.batch(w, s, batch_size=8),
+                data.eval_batch(64), eta0=0.2, seed=0, mode=mode,
+                block_size=5, batch_pool=32)
+
+        ref = mk("per_event")
+        res_ref = ref.run(max_events=20, eval_every=10)
+        sparse = mk("sparse_scan")
+        res_sparse = sparse.run(max_events=20, eval_every=10)
+        for la, lb in zip(jax.tree.leaves(ref.W), jax.tree.leaves(sparse.W)):
+            np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                       atol=1e-6)
+        assert res_sparse.final_loss == pytest.approx(res_ref.final_loss,
+                                                      abs=1e-5)
+
+
+class TestEventHorizonBatcher:
+    @pytest.mark.parametrize("alg", ["ad_psgd", "agp"])
+    def test_deterministic(self, alg):
+        e1 = list(itertools.islice(_sched(alg, horizon=16).events(), 50))
+        e2 = list(itertools.islice(_sched(alg, horizon=16).events(), 50))
+        for a, b in zip(e1, e2):
+            assert a.time == b.time
+            np.testing.assert_array_equal(a.workers, b.workers)
+            np.testing.assert_array_equal(a.P_sub, b.P_sub)
+
+    @pytest.mark.parametrize("alg", ["ad_psgd", "agp"])
+    def test_stream_invariants(self, alg):
+        sched = _sched(alg, horizon=8)
+        evs = list(itertools.islice(sched.events(), 60))
+        assert [ev.k for ev in evs] == list(range(60))
+        for ev in evs:
+            assert np.allclose(ev.P.sum(axis=1), 1.0)
+            if alg == "ad_psgd":
+                assert is_doubly_stochastic(ev.P)
+            for i, j in ev.active_edges:
+                assert sched.graph.adj[i, j]
+        if alg == "ad_psgd":  # the averaging lock keeps times ordered
+            ts = [ev.time for ev in evs]
+            assert all(b >= a for a, b in zip(ts, ts[1:]))
+
+    def test_horizon_is_a_different_realization(self):
+        """Documented trade-off: vectorized draws reorder the RNG stream,
+        so horizon events differ from the exact per-event stream."""
+        exact = [ev.time for ev in
+                 itertools.islice(_sched("ad_psgd").events(), 50)]
+        horizon = [ev.time for ev in
+                   itertools.islice(_sched("ad_psgd", horizon=16).events(), 50)]
+        assert exact != horizon
+
+    def test_trainer_modes_agree_on_horizon_stream(self):
+        def mk(mode):
+            return _trainer(_sched("ad_psgd", horizon=8), mode,
+                            block_size=7, batch_pool=48)
+        ref = mk("per_event")
+        res_ref = ref.run(max_events=30, eval_every=10)
+        sparse = mk("sparse_scan")
+        res_sparse = sparse.run(max_events=30, eval_every=10)
+        for la, lb in zip(jax.tree.leaves(ref.W), jax.tree.leaves(sparse.W)):
+            np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                       atol=1e-6)
+        for p_r, p_s in zip(res_ref.history, res_sparse.history):
+            assert p_s.k == p_r.k and p_s.time == pytest.approx(p_r.time)
+            assert p_s.loss == pytest.approx(p_r.loss, abs=1e-5)
+
+    def test_bad_horizon_rejected(self):
+        with pytest.raises(ValueError, match="horizon"):
+            _sched("ad_psgd", horizon=0)
+
+
+class TestMaxTimePoolSizing:
+    def test_pool_derived_from_max_time(self):
+        """A max_time-bounded scan run sizes its batch pool from a restart
+        estimate instead of the old 64-draw fallback, so long runs don't
+        silently revisit samples."""
+        tr = _trainer(_sched("ad_psgd"), "scan")
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")  # the wrap warning must not fire
+            tr.run(max_time=60.0, eval_every=50)
+        # 2 × 60 / min base time (=1.0) = 120 draws per worker
+        assert tr._pool_len == 120
+        assert int(jnp.max(tr._ptr)) <= tr._pool_len
+
+    def test_explicit_batch_pool_still_wins(self):
+        tr = _trainer(_sched("ad_psgd"), "scan", batch_pool=24)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            tr.run(max_time=30.0, eval_every=50)
+        assert tr._pool_len == 24

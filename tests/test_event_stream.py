@@ -161,6 +161,25 @@ class TestScanEquivalence:
         for a, b in zip(jax.tree.leaves(W0), jax.tree.leaves(tr.W)):
             np.testing.assert_array_equal(a, np.asarray(b))
 
+    def test_eval_buffer_growth_matches_per_event(self):
+        """A max_time-bounded run has no up-front eval count, so the scan
+        modes start from a small device eval buffer (16 rows) and must grow
+        it mid-run; the recorded history has to stay point-for-point equal
+        to the per-event path across the growth boundary."""
+        ref = _trainer("ad_psgd", "per_event")
+        res_ref = ref.run(max_time=8.0, eval_every=1)
+        scan = _trainer("ad_psgd", "scan", block_size=4)
+        res_scan = scan.run(max_time=8.0, eval_every=1)
+        assert len(res_ref.history) > 16  # the initial cap was outgrown
+        assert len(res_scan.history) == len(res_ref.history)
+        for p_ref, p_scan in zip(res_ref.history, res_scan.history):
+            assert p_scan.k == p_ref.k
+            assert p_scan.time == pytest.approx(p_ref.time)
+            assert p_scan.loss == pytest.approx(p_ref.loss, abs=1e-5)
+            assert p_scan.metric == pytest.approx(p_ref.metric, abs=1e-5)
+            assert p_scan.comm_param_copies == p_ref.comm_param_copies
+            assert p_scan.n_active_mean == pytest.approx(p_ref.n_active_mean)
+
 
 class TestBatchedMaskedKernels:
     @pytest.mark.parametrize("n,d", [(8, 128), (13, 257), (16, 640)])
