@@ -1,11 +1,75 @@
-"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs."""
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the dry-run JSONs,
+and the paper-figure tables (speedup-vs-N, dtype policy, convergence CSV)
+from BENCH_paper_figures.json:
+
+  python experiments/render_tables.py paper_figures [path/to/artifact.json]
+"""
 import json
+import math
 import sys
 
 
 def load(path):
     return {(r["arch"], r["shape"]): r for r in json.load(open(path))
             if "error" not in r}
+
+
+def _f(v):
+    """Artifact floats serialize NaN/Inf as strings (allow_nan=False);
+    float() parses both plain numbers and those strings."""
+    return float(v)
+
+
+def speedup_table(artifact):
+    """Markdown pivot: rows scenario × N, one column per algorithm."""
+    rows = artifact["speedup_vs_n"]
+    algs = sorted({r["algorithm"] for r in rows})
+    cells = {}
+    for r in rows:
+        m, s = _f(r["speedup_mean"]), _f(r["speedup_std"])
+        cells[(r["scenario"], r["n"], r["algorithm"])] = (
+            "unreached" if math.isnan(m) else f"{m:.2f} ± {s:.2f}")
+    out = ["| scenario | N | " + " | ".join(algs) + " |",
+           "|---|---:|" + "---:|" * len(algs)]
+    for scen, n in sorted({(r["scenario"], r["n"]) for r in rows}):
+        vals = [cells.get((scen, n, a), "—") for a in algs]
+        out.append(f"| {scen} | {n} | " + " | ".join(vals) + " |")
+    return "\n".join(out)
+
+
+def dtype_table(artifact):
+    rows = artifact.get("dtype_policy", [])
+    if not rows:
+        return "(no dtype rows recorded)"
+    out = ["| dtype | algorithm | N | events | final loss | events/s |",
+           "|---|---|---:|---:|---:|---:|"]
+    for r in rows:
+        out.append(f"| {r['dtype']} | {r['algorithm']} | {r['n']} "
+                   f"| {r['events']} | {_f(r['final_loss']):.4f} "
+                   f"| {_f(r['events_per_s']):.1f} |")
+    return "\n".join(out)
+
+
+def convergence_csv(artifact):
+    """Flat CSV of the seed-averaged convergence curves (plotting input)."""
+    out = ["scenario,n,algorithm,k,time_mean,loss_mean,loss_std,metric_mean"]
+    for c in artifact["convergence"]:
+        for p in c["points"]:
+            out.append(
+                f"{c['scenario']},{c['n']},{c['algorithm']},{p['k']},"
+                f"{_f(p['time_mean'])},{_f(p['loss_mean'])},"
+                f"{_f(p['loss_std'])},{_f(p['metric_mean'])}")
+    return "\n".join(out)
+
+
+def paper_figures(path="BENCH_paper_figures.json"):
+    artifact = json.load(open(path))
+    print("### Speedup vs N (× over synchronous DSGD, mean ± std over seeds)\n")
+    print(speedup_table(artifact))
+    print("\n### dtype policy (fp32 vs bf16 worker state)\n")
+    print(dtype_table(artifact))
+    print("\n### Convergence curves (CSV)\n")
+    print(convergence_csv(artifact))
 
 
 def fmt_bytes(b):
@@ -61,6 +125,9 @@ def before_after(baseline, opt, pairs):
 
 
 if __name__ == "__main__":
+    if len(sys.argv) > 1 and sys.argv[1] == "paper_figures":
+        paper_figures(*sys.argv[2:3])
+        sys.exit(0)
     single = load("experiments/dryrun_single.json")
     multi = load("experiments/dryrun_multi.json")
     base = load("experiments/baseline_single.json")

@@ -1,7 +1,9 @@
 """repro: straggler-resilient decentralized learning (DSGD-AAU) in JAX.
 
-Layers: core (the paper's algorithm + baselines), models (assigned arch zoo),
-data / optim / checkpoint substrates, kernels (Pallas TPU), launch (mesh,
-dry-run, train/serve drivers), configs (architecture registry).
+Layers: core (the paper's algorithm + baselines), scenarios (TimeModel
+protocol + named straggler regimes), xp (declarative experiment harness →
+paper-figure artifacts), models (assigned arch zoo), data / optim /
+checkpoint substrates, kernels (Pallas TPU), launch (mesh, dry-run,
+train/serve drivers), configs (architecture registry).
 """
 __version__ = "1.0.0"

@@ -90,16 +90,20 @@ def masked_gossip_step(
         return mask.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
 
     gm = grad_mask
+    # η is traced as float32; fold it into the 0/1 mask *before* casting to
+    # each leaf's dtype (exact for fp32 — the product is η or 0) so a bf16
+    # worker state stays bf16 through the update instead of being promoted
+    # by the f32 scalar (a scan carry must keep its dtype).
+    scaled = eta * gm.astype(jnp.float32)
     if use_kernel:
         # Fused Pallas path: Pᵀ·(W − η·mask⊙G) in one kernel per leaf.
         from repro.kernels.gossip_mix import ops as gossip_ops
-        scaled = eta * gm.astype(jnp.float32)
         Wn = jax.tree.map(
             lambda w, g: gossip_ops.masked_gossip_mix(
                 w, g, P.astype(w.dtype), scaled.astype(w.dtype)),
             W, grads)
     else:
-        Wg = jax.tree.map(lambda w, g: w - eta * expand(gm, w) * g, W, grads)
+        Wg = jax.tree.map(lambda w, g: w - expand(scaled, w) * g, W, grads)
         Wn = gossip_mix_dense(Wg, P, use_kernel=False)
     yn = jnp.einsum("n,nj->j", y, P.astype(y.dtype))
     rm = restart_mask

@@ -32,7 +32,7 @@ from typing import Dict, Iterator, List, Optional, Set, Tuple
 import numpy as np
 
 from repro.core.scheduler import _EMPTY_EDGES, Scheduler, ScheduleEvent
-from repro.core.straggler import StragglerModel
+from repro.scenarios.base import TimeModelSpec
 from repro.core.topology import Graph
 
 
@@ -63,7 +63,7 @@ class _SingleEdgeScheduler(Scheduler):
 
     lock_time = 0.0
 
-    def __init__(self, graph: Graph, straggler: StragglerModel, seed: int,
+    def __init__(self, graph: Graph, straggler: TimeModelSpec, seed: int,
                  horizon: Optional[int] = None):
         super().__init__(graph, straggler)
         self._rng = np.random.default_rng(seed)
@@ -243,7 +243,7 @@ class ADPSGDScheduler(_SingleEdgeScheduler):
 
     name = "ad_psgd"
 
-    def __init__(self, graph: Graph, straggler: StragglerModel, seed: int = 1,
+    def __init__(self, graph: Graph, straggler: TimeModelSpec, seed: int = 1,
                  avg_time: float = 0.05, horizon: Optional[int] = None):
         super().__init__(graph, straggler, seed=seed, horizon=horizon)
         self.avg_time = avg_time * straggler.base_time
@@ -270,7 +270,7 @@ class PragueScheduler(Scheduler):
 
     name = "prague"
 
-    def __init__(self, graph: Graph, straggler: StragglerModel,
+    def __init__(self, graph: Graph, straggler: TimeModelSpec,
                  group_size: int = 4, seed: int = 2):
         super().__init__(graph, straggler)
         self.group_size = max(2, min(group_size, graph.n))
@@ -350,7 +350,7 @@ class AGPScheduler(_SingleEdgeScheduler):
 
     name = "agp"
 
-    def __init__(self, graph: Graph, straggler: StragglerModel, seed: int = 3,
+    def __init__(self, graph: Graph, straggler: TimeModelSpec, seed: int = 3,
                  horizon: Optional[int] = None):
         super().__init__(graph, straggler, seed=seed, horizon=horizon)
 
@@ -363,7 +363,7 @@ class AGPScheduler(_SingleEdgeScheduler):
                 _LANE_SECOND, 1)
 
 
-def make_scheduler(name: str, graph: Graph, straggler: StragglerModel, **kw) -> Scheduler:
+def make_scheduler(name: str, graph: Graph, straggler: TimeModelSpec, **kw) -> Scheduler:
     from repro.core.scheduler import AAUScheduler, SyncScheduler
     table = {
         "dsgd_aau": AAUScheduler,

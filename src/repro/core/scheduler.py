@@ -53,8 +53,8 @@ import numpy as np
 
 from repro.core.consensus import metropolis_matrix, metropolis_submatrix
 from repro.core.pathsearch import PathSearchState
-from repro.core.straggler import StragglerModel, TimeSampler
 from repro.core.topology import Graph
+from repro.scenarios.base import TimeModel, TimeModelSpec
 
 Edge = Tuple[int, int]
 
@@ -523,12 +523,17 @@ class Scheduler:
     #: automatically falls back to the dense scan.
     global_events = False
 
-    def __init__(self, graph: Graph, straggler: StragglerModel):
+    def __init__(self, graph: Graph, straggler: TimeModelSpec):
+        # ``straggler`` is anything satisfying the TimeModelSpec protocol:
+        # the paper's StragglerModel or any registered Scenario
+        # (repro/scenarios) — schedulers only ever touch the sampler's
+        # TimeModel surface (sample / sample_batch / sample_horizon /
+        # sample_all / base).
         if straggler.n != graph.n:
-            raise ValueError("straggler model and graph disagree on n")
+            raise ValueError("time model and graph disagree on n")
         self.graph = graph
         self.n = graph.n
-        self.sampler: TimeSampler = straggler.make_sampler()
+        self.sampler: TimeModel = straggler.make_sampler()
 
     def events(self) -> Iterator[ScheduleEvent]:
         raise NotImplementedError

@@ -6,6 +6,15 @@ computation is slowed by a factor ``s`` (ablated 5×–40×, default 10×; 6× i
 §6).  We add optional persistent heterogeneity (lognormal base speeds) to
 model heterogeneous hardware, and a deterministic seed so every experiment is
 reproducible.
+
+This pair is the canonical instance of the scenario layer's protocols
+(repro/scenarios/base.py): ``StragglerModel`` satisfies ``TimeModelSpec``
+(``n`` + ``base_time`` + ``make_sampler``) and ``TimeSampler`` satisfies
+``TimeModel`` (``sample``/``sample_batch``/``sample_horizon``/``sample_all``
++ ``base``).  Schedulers only consume those surfaces, so any registered
+scenario — heavy-tailed, bimodal, diurnal, churn — drops in wherever a
+``StragglerModel`` was accepted; the ``paper_default`` scenario returns an
+actual ``TimeSampler`` and is therefore bit-exact with these streams.
 """
 from __future__ import annotations
 

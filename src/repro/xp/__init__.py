@@ -1,0 +1,27 @@
+"""Config-driven experiment harness: paper figures as declarative sweeps.
+
+``ExperimentSpec`` (repro/xp/spec.py) names an algorithm × topology ×
+scenario × scale × seeds sweep; ``run_spec`` executes it on the sparse scan
+path with mean±std aggregation; ``artifact_payload``/``write_artifact``
+emit the ``BENCH_paper_figures.json`` schema and the benchmark CSV rows.
+``python -m repro.xp --smoke`` is the CI dry-run tier.
+"""
+from repro.xp.artifacts import (artifact_payload, csv_rows, load_artifact,
+                                write_artifact)
+from repro.xp.builders import (build_graph, build_scenario, build_trainer,
+                               mlp2nn_eval, mlp2nn_init, mlp2nn_loss)
+from repro.xp.presets import get_preset, paper_figures_spec, smoke_spec
+from repro.xp.spec import ExperimentSpec
+from repro.xp.sweep import (RunRecord, SweepResult, convergence_rows,
+                            dtype_probe_rows, run_cell, run_spec,
+                            speedup_rows)
+
+__all__ = [
+    "ExperimentSpec", "RunRecord", "SweepResult",
+    "artifact_payload", "csv_rows", "load_artifact", "write_artifact",
+    "build_graph", "build_scenario", "build_trainer",
+    "mlp2nn_eval", "mlp2nn_init", "mlp2nn_loss",
+    "get_preset", "paper_figures_spec", "smoke_spec",
+    "convergence_rows", "dtype_probe_rows", "run_cell", "run_spec",
+    "speedup_rows",
+]

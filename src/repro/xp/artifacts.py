@@ -1,0 +1,110 @@
+"""Artifact writers: BENCH_paper_figures.json + benchmark CSV rows.
+
+The JSON artifact schema (consumed by experiments/render_tables.py):
+
+```
+{
+  "meta":        {spec: {...}, jax: "...", generated_unix: float},
+  "scenarios":   {name: Scenario.describe() at the largest scale},
+  "speedup_vs_n":  [ {scenario, n, algorithm, speedup_mean, speedup_std,
+                      t_target_mean, t_sync_mean, n_seeds, unreached} ],
+  "convergence":   [ {scenario, n, algorithm, n_seeds,
+                      points: [{k, time_mean, loss_mean, loss_std,
+                                metric_mean}]} ],
+  "dtype_policy":  [ {dtype, scenario, algorithm, n, events, final_loss,
+                      final_metric, wall_s, events_per_s} ],
+}
+```
+
+``speedup_mean`` is NaN (serialized as the JSON string "nan") whenever a
+run never reached the target loss inside its budget — the ``unreached``
+count says how many seeds that was — so an artifact can never be misread as
+"no speedup" when the truth is "budget too small".
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+from typing import Dict, List
+
+import jax
+
+from repro.xp.sweep import SweepResult, convergence_rows, speedup_rows
+
+
+def _json_safe(obj):
+    """NaN/Inf → strings, tuples → lists (json.dump with allow_nan=False)."""
+    if isinstance(obj, float):
+        if math.isnan(obj):
+            return "nan"
+        if math.isinf(obj):
+            return "inf" if obj > 0 else "-inf"
+        return obj
+    if isinstance(obj, dict):
+        return {k: _json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_json_safe(v) for v in obj]
+    return obj
+
+
+def parse_float(v) -> float:
+    """Inverse of the NaN/Inf serialization above (for artifact readers);
+    ``float()`` parses plain numbers and the "nan"/"inf" strings alike."""
+    return float(v)
+
+
+def artifact_payload(sweep: SweepResult) -> Dict[str, object]:
+    return {
+        "meta": {
+            "spec": sweep.spec.to_dict(),
+            "jax": jax.__version__,
+            "generated_unix": round(time.time(), 1),
+        },
+        "scenarios": sweep.scenario_meta,
+        "speedup_vs_n": speedup_rows(sweep),
+        "convergence": convergence_rows(sweep),
+        "dtype_policy": sweep.dtype_rows,
+    }
+
+
+def write_artifact(path: str, payload: Dict[str, object]) -> None:
+    with open(path, "w") as f:
+        json.dump(_json_safe(payload), f, indent=1, allow_nan=False)
+        f.write("\n")
+
+
+def load_artifact(path: str) -> Dict[str, object]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def csv_rows(payload: Dict[str, object]) -> List[str]:
+    """The benchmark-harness CSV contract: ``name,us_per_call,derived``."""
+    out = []
+    for r in payload["speedup_vs_n"]:
+        mean = parse_float(r["speedup_mean"])
+        std = parse_float(r["speedup_std"])
+        t_t = parse_float(r["t_target_mean"])
+        t_s = parse_float(r["t_sync_mean"])
+        fmt = lambda v: "unreached" if math.isnan(v) else f"{v:.1f}"
+        if math.isnan(mean):
+            # distinguish "the algorithm never got there" from "the sync
+            # reference's budget fell short" — keep whichever time exists
+            derived = (f"speedup_vs_sync=nan;t_target={fmt(t_t)};"
+                       f"t_sync={fmt(t_s)};"
+                       f"unreached={r['unreached']}/{r['n_seeds']};"
+                       f"unreached_ref={r.get('unreached_ref', 0)}"
+                       f"/{r['n_seeds']}")
+        else:
+            derived = (f"speedup_vs_sync={mean:.2f};std={std:.2f};"
+                       f"t_target={fmt(t_t)};t_sync={fmt(t_s)};"
+                       f"unreached={r['unreached']}/{r['n_seeds']}")
+        out.append(f"paper_figures/speedup/{r['scenario']}/N{r['n']}/"
+                   f"{r['algorithm']},0.0,{derived}")
+    for r in payload.get("dtype_policy", []):
+        out.append(
+            f"paper_figures/dtype/{r['dtype']}/{r['algorithm']}/N{r['n']},"
+            f"0.0,final_loss={parse_float(r['final_loss']):.4f};"
+            f"events_per_s={parse_float(r['events_per_s']):.1f}")
+    return out

@@ -1,0 +1,113 @@
+"""Model and trainer builders shared by the harness and the benchmarks.
+
+The paper's 2-NN classifier (Table 3 shape, reduced input dim for the
+synthetic Gaussian-mixture data) lives here so both the declarative
+experiment harness (repro/xp/sweep.py) and the legacy benchmark helpers
+(benchmarks/common.py) build byte-identical trainers.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology
+from repro.core.baselines import make_scheduler
+from repro.core.runner import DecentralizedTrainer
+from repro.data import ClassificationData
+from repro.scenarios import Scenario, get_scenario
+from repro.xp.spec import ExperimentSpec
+
+
+def mlp2nn_loss(params, batch):
+    """The paper's 2-NN (Table 3 shape, reduced input dim for synthetic data)."""
+    h = jax.nn.relu(batch["x"] @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    logits = h @ params["w3"] + params["b3"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], axis=1))
+
+
+def mlp2nn_eval(params, batch):
+    h = jax.nn.relu(batch["x"] @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    logits = h @ params["w3"] + params["b3"]
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["y"]).astype(jnp.float32))
+    return mlp2nn_loss(params, batch), acc
+
+
+def mlp2nn_init(d_in=64, d_h=256, n_cls=10):
+    def init(key):
+        ks = jax.random.split(key, 3)
+        s = lambda k, a, b: jax.random.normal(k, (a, b)) / np.sqrt(a)
+        return {"w1": s(ks[0], d_in, d_h), "b1": jnp.zeros(d_h),
+                "w2": s(ks[1], d_h, d_h), "b2": jnp.zeros(d_h),
+                "w3": s(ks[2], d_h, n_cls), "b3": jnp.zeros(n_cls)}
+    return init
+
+
+def build_graph(kind: str, n: int, **kw) -> topology.Graph:
+    """Topology factory for ExperimentSpec.topology."""
+    if kind == "erdos_renyi":
+        p = kw.get("p")
+        if p is None:
+            p = max(0.15, 4.0 / n)
+        return topology.erdos_renyi(n, p, seed=kw.get("seed", 1))
+    if kind == "ring":
+        return topology.ring(n)
+    if kind == "fully_connected":
+        return topology.fully_connected(n)
+    raise KeyError(f"unknown topology {kind!r}; "
+                   "have erdos_renyi, ring, fully_connected")
+
+
+# Per-algorithm scheduler-RNG seed bases — the historical class defaults, so
+# a sweep at seed 0 reproduces today's bench streams exactly; other sweep
+# seeds shift every stream by a large co-prime stride.
+_SCHED_SEED_BASE = {"ad_psgd": 1, "prague": 2, "agp": 3}
+
+
+def build_scenario(spec: ExperimentSpec, name: str, n: int,
+                   seed: int) -> Scenario:
+    kw = dict(spec.scenario_kw.get(name, {}))
+    # a spec may pin a scenario's RNG explicitly; n always comes from the
+    # sweep's scale axis
+    kw.pop("n", None)
+    seed = kw.pop("seed", seed)
+    return get_scenario(name, n=n, seed=seed, **kw)
+
+
+def build_trainer(spec: ExperimentSpec, alg: str, n: int, seed: int,
+                  scenario: Optional[Scenario] = None,
+                  dtype: Optional[str] = None,
+                  batch_pool: Optional[int] = None) -> DecentralizedTrainer:
+    """One (algorithm × topology × scenario × scale × seed) trainer.
+
+    ``scenario`` may be passed pre-built (the sweep builds it once per cell
+    to read its ``mean_duration_factor`` for budget scaling); otherwise the
+    spec's first scenario is instantiated at this seed.
+    """
+    if scenario is None:
+        scenario = build_scenario(spec, spec.scenarios[0], n, seed)
+    data = ClassificationData(
+        n_workers=n, d=64, partition=spec.partition,
+        samples_per_worker=256, seed=spec.data_seed)
+    g = build_graph(spec.topology, n, **dict(spec.topology_kw))
+    sched_kw = {}
+    if alg in _SCHED_SEED_BASE:
+        sched_kw["seed"] = _SCHED_SEED_BASE[alg] + 7919 * seed
+    if alg == "prague":
+        sched_kw["group_size"] = spec.group_size
+    if alg in ("ad_psgd", "agp") and spec.horizon:
+        sched_kw["horizon"] = spec.horizon
+    sched = make_scheduler(alg, g, scenario, **sched_kw)
+    return DecentralizedTrainer(
+        sched, mlp2nn_loss, mlp2nn_init(),
+        lambda w, s: data.batch(w, s, batch_size=32),
+        data.eval_batch(1024), eval_fn=mlp2nn_eval,
+        eta0=spec.eta0, eta_decay=spec.eta_decay, seed=seed,
+        mode=spec.mode, block_size=spec.block_size,
+        batch_pool=batch_pool if batch_pool is not None else spec.batch_pool,
+        dtype=dtype or spec.dtype)

@@ -1,0 +1,199 @@
+"""Scenario subsystem: bit-exactness of paper_default, TimeModel protocol
+conformance, stream compatibility, and distribution sanity.
+
+The contracts pinned here:
+
+- ``paper_default`` is *bit-exact* with the pre-scenario-engine
+  ``StragglerModel``/``TimeSampler`` streams for all five schedulers — the
+  scenario engine must never perturb recorded runs;
+- every registered scenario satisfies the ``TimeModel`` surface the
+  schedulers and the horizon batcher consume;
+- ``sample_batch([w])`` and ``sample(w)`` consume the RNG stream
+  identically (the m == 1 contract ``TimeSampler`` documents), so
+  schedulers can mix the call styles without forking realizations;
+- empirical moments/quantiles match each scenario's analytic
+  ``mean_duration_factor`` and shape claims.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.baselines import make_scheduler
+from repro.core.straggler import StragglerModel
+from repro.scenarios import (Scenario, TimeModel, get_scenario,
+                             scenario_names)
+from repro.scenarios.library import (BimodalScenario, ChurnScenario,
+                                     DiurnalScenario, HeavyTailScenario)
+
+ALGS = ("dsgd_aau", "dsgd_sync", "ad_psgd", "prague", "agp")
+N = 8
+GRAPH = topology.erdos_renyi(N, 0.4, seed=3)
+
+
+def _events_equal(a, b):
+    assert a.k == b.k
+    assert a.time == b.time
+    np.testing.assert_array_equal(a.workers, b.workers)
+    np.testing.assert_array_equal(a.P_sub, b.P_sub)
+    np.testing.assert_array_equal(a.grad_lanes, b.grad_lanes)
+    np.testing.assert_array_equal(a.restart_lanes, b.restart_lanes)
+    np.testing.assert_array_equal(a.edges, b.edges)
+    assert a.param_copies_sent == b.param_copies_sent
+
+
+class TestPaperDefaultBitExact:
+    """paper_default ≡ StragglerModel for every scheduler's event stream."""
+
+    @pytest.mark.parametrize("alg", ALGS)
+    def test_stream_bit_exact(self, alg):
+        sm = StragglerModel(n=N, straggler_prob=0.2, slowdown=6.0, seed=5)
+        sc = get_scenario("paper_default", n=N, seed=5,
+                          straggler_prob=0.2, slowdown=6.0)
+        ref = itertools.islice(make_scheduler(alg, GRAPH, sm).events(), 40)
+        new = itertools.islice(make_scheduler(alg, GRAPH, sc).events(), 40)
+        for a, b in zip(ref, new):
+            _events_equal(a, b)
+
+    def test_horizon_stream_bit_exact(self):
+        sm = StragglerModel(n=N, straggler_prob=0.2, slowdown=6.0, seed=5)
+        sc = get_scenario("paper_default", n=N, seed=5,
+                          straggler_prob=0.2, slowdown=6.0)
+        ref = itertools.islice(
+            make_scheduler("ad_psgd", GRAPH, sm, horizon=8).events(), 40)
+        new = itertools.islice(
+            make_scheduler("ad_psgd", GRAPH, sc, horizon=8).events(), 40)
+        for a, b in zip(ref, new):
+            _events_equal(a, b)
+
+    def test_heterogeneity_passthrough(self):
+        sm = StragglerModel(n=N, heterogeneity=0.5, seed=2)
+        sc = get_scenario("paper_default", n=N, seed=2, heterogeneity=0.5)
+        np.testing.assert_array_equal(sm.make_sampler().base,
+                                      sc.make_sampler().base)
+
+
+class TestProtocolConformance:
+    @pytest.mark.parametrize("name", scenario_names())
+    def test_time_model_surface(self, name):
+        sc = get_scenario(name, n=6, seed=1)
+        assert isinstance(sc, Scenario)
+        s = sc.make_sampler()
+        assert isinstance(s, TimeModel)  # runtime-checkable protocol
+        assert s.base.shape == (6,)
+        assert float(s.sample(3)) > 0
+        assert s.sample_batch([0, 2, 4]).shape == (3,)
+        assert s.sample_horizon(5).shape == (5,)
+        assert s.sample_all().shape == (6,)
+
+    @pytest.mark.parametrize("name", scenario_names())
+    def test_deterministic_given_seed(self, name):
+        a = get_scenario(name, n=6, seed=7).make_sampler()
+        b = get_scenario(name, n=6, seed=7).make_sampler()
+        for _ in range(5):
+            np.testing.assert_array_equal(a.sample_all(), b.sample_all())
+        np.testing.assert_array_equal(a.sample_horizon(9),
+                                      b.sample_horizon(9))
+
+    @pytest.mark.parametrize("name", scenario_names())
+    def test_sample_batch_stream_compatible_with_sample(self, name):
+        """Driving one sampler by repeated sample(w) and another by the
+        equivalent singleton sample_batch([w]) calls must produce identical
+        value *streams* — the contract that lets scheduler hot loops mix
+        the two call styles."""
+        a = get_scenario(name, n=6, seed=3).make_sampler()
+        b = get_scenario(name, n=6, seed=3).make_sampler()
+        workers = [0, 3, 5, 1, 3, 0, 2, 4, 4, 1]
+        va = [a.sample(w) for w in workers]
+        vb = [float(b.sample_batch([w])[0]) for w in workers]
+        np.testing.assert_array_equal(va, vb)
+
+    def test_registry_rejects_unknowns(self):
+        with pytest.raises(KeyError, match="unknown scenario"):
+            get_scenario("nope", n=4)
+        with pytest.raises(TypeError, match="no parameter"):
+            get_scenario("heavy_tail", n=4, beta=2.0)
+
+    def test_overrides_applied(self):
+        sc = get_scenario("heavy_tail", n=4, alpha=2.5)
+        assert sc.alpha == 2.5
+
+
+class TestDistributionSanity:
+    """Moments/quantiles of each scenario match its analytic description."""
+
+    def _draws(self, sc, rounds=4000):
+        s = sc.make_sampler()
+        return np.concatenate([s.sample_all() for _ in range(rounds // sc.n)])
+
+    @pytest.mark.parametrize("name", scenario_names())
+    def test_empirical_mean_matches_mean_duration_factor(self, name):
+        sc = get_scenario(name, n=8, seed=0)
+        d = self._draws(sc, rounds=6000)
+        if name == "heavy_tail":  # infinite-variance mean converges slowly
+            assert abs(d.mean() - sc.mean_duration_factor()) \
+                < 0.35 * sc.mean_duration_factor()
+        else:
+            assert d.mean() == pytest.approx(
+                sc.mean_duration_factor() * sc.base_time, rel=0.12)
+
+    def test_heavy_tail_quantiles(self):
+        sc = HeavyTailScenario(n=8, seed=0, alpha=2.5)
+        d = self._draws(sc, rounds=8000)
+        assert d.min() >= 1.0  # x_m = base_time floor
+        assert np.median(d) == pytest.approx(2 ** (1 / 2.5), rel=0.05)
+        # the tail really is heavy: P[X > 4] = 4^-2.5 ≈ 3.1%
+        assert np.mean(d > 4.0) == pytest.approx(4.0 ** -2.5, abs=0.015)
+
+    def test_bimodal_clusters_are_persistent(self):
+        sc = BimodalScenario(n=16, seed=0, slow_frac=0.25, slow_factor=5.0)
+        s = sc.make_sampler()
+        assert len(s.slow_workers) == 4
+        draws = np.stack([s.sample_all() for _ in range(200)])
+        slow_mean = draws[:, s.slow_workers].mean()
+        fast = np.setdiff1d(np.arange(16), s.slow_workers)
+        assert slow_mean == pytest.approx(5.0 * draws[:, fast].mean(),
+                                          rel=0.05)
+
+    def test_diurnal_intensity_varies_with_phase(self):
+        sc = DiurnalScenario(n=4, seed=0, straggler_prob=0.6, slowdown=10.0,
+                             period=64.0, jitter=0.0)
+        s = sc.make_sampler()
+        draws = np.stack([s.sample_all() for _ in range(256)])  # 4 periods
+        # worker 0 (phase 0): straggler intensity peaks around draw 16 of
+        # each 64-draw period (sin ≈ 1 ⇒ p ≈ 0.6) and bottoms around draw
+        # 48 (sin ≈ −1 ⇒ p ≈ 0); compare the two quarter-period windows
+        w0 = draws[:, 0].reshape(4, 64)
+        peak, trough = w0[:, 8:24], w0[:, 40:56]
+        assert (peak > 5).mean() > 0.3
+        assert (trough > 5).mean() < 0.18
+        assert (peak > 5).mean() > 2.5 * max((trough > 5).mean(), 1e-9)
+
+    def test_churn_downtime_shape(self):
+        sc = ChurnScenario(n=8, seed=0, churn_prob=0.05, downtime=25.0,
+                           jitter=0.0)
+        d = self._draws(sc, rounds=8000)
+        down = d > 5.0  # an offline period dwarfs a normal computation
+        assert down.mean() == pytest.approx(0.05, abs=0.012)
+        # offline durations are exponential with the configured mean
+        assert (d[down] - 1.0).mean() == pytest.approx(25.0, rel=0.25)
+
+
+class TestSchedulerIntegration:
+    @pytest.mark.parametrize("name", scenario_names())
+    @pytest.mark.parametrize("alg", ALGS)
+    def test_streams_well_formed(self, name, alg):
+        sc = get_scenario(name, n=N, seed=1)
+        sched = make_scheduler(alg, GRAPH, sc)
+        evs = list(itertools.islice(sched.events(), 20))
+        assert [e.k for e in evs] == list(range(20))
+        assert all(e.time > 0 for e in evs)
+        assert all(len(e.workers) <= sched.active_bound() for e in evs)
+
+    @pytest.mark.parametrize("name", scenario_names())
+    def test_horizon_batcher_works(self, name):
+        sc = get_scenario(name, n=N, seed=1)
+        evs = list(itertools.islice(
+            make_scheduler("agp", GRAPH, sc, horizon=8).events(), 30))
+        assert [e.k for e in evs] == list(range(30))

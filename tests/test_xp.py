@@ -1,0 +1,172 @@
+"""Experiment harness: spec validation, sweep aggregation, artifact schema,
+NaN-honest speedup reporting, and the trainer dtype policy.
+"""
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.xp import (ExperimentSpec, artifact_payload, build_trainer,
+                      csv_rows, load_artifact, run_spec, smoke_spec,
+                      speedup_rows, write_artifact)
+
+TINY = ExperimentSpec(
+    name="tiny",
+    algorithms=("dsgd_aau", "ad_psgd"),
+    reference="dsgd_sync",
+    scenarios=("paper_default", "churn"),
+    scales=(6,),
+    seeds=(0, 1),
+    mode="sparse_scan",
+    max_events=16,
+    eval_every=8,
+    target_loss=2.5,  # reached almost immediately: speedups stay finite
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_sweep():
+    return run_spec(TINY)
+
+
+class TestSpec:
+    def test_rejects_unknown_algorithm(self):
+        with pytest.raises(KeyError):
+            ExperimentSpec(algorithms=("nope",))
+
+    def test_rejects_unbounded(self):
+        with pytest.raises(ValueError):
+            ExperimentSpec(max_events=None, max_time=None)
+
+    def test_round_trips_to_dict(self):
+        d = TINY.to_dict()
+        assert d["name"] == "tiny"
+        json.dumps(d)  # JSON-serializable
+        assert ExperimentSpec(**{**d, "algorithms": tuple(d["algorithms"]),
+                                 "reference": d["reference"],
+                                 "scenarios": tuple(d["scenarios"]),
+                                 "scales": tuple(d["scales"]),
+                                 "seeds": tuple(d["seeds"])}).name == "tiny"
+
+    def test_smoke_preset_covers_all_scenarios(self):
+        from repro.scenarios import scenario_names
+        assert smoke_spec().scenarios == scenario_names()
+
+
+class TestSweep:
+    def test_record_grid_complete(self, tiny_sweep):
+        # 2 scenarios × 1 scale × 2 seeds × (ref + 2 algs)
+        assert len(tiny_sweep.records) == 2 * 1 * 2 * 3
+        for r in tiny_sweep.records:
+            assert r.result.total_events == 16
+            assert np.isfinite(r.result.final_loss)
+
+    def test_speedup_rows_aggregate_seeds(self, tiny_sweep):
+        rows = speedup_rows(tiny_sweep)
+        assert {(r["scenario"], r["algorithm"]) for r in rows} == {
+            ("paper_default", "dsgd_aau"), ("paper_default", "ad_psgd"),
+            ("churn", "dsgd_aau"), ("churn", "ad_psgd")}
+        for r in rows:
+            assert r["n_seeds"] == 2
+            assert r["unreached"] == 0
+            assert math.isfinite(r["speedup_mean"])
+            assert r["speedup_std"] >= 0
+
+    def test_artifact_schema_and_round_trip(self, tiny_sweep, tmp_path):
+        payload = artifact_payload(tiny_sweep)
+        assert set(payload) == {"meta", "scenarios", "speedup_vs_n",
+                                "convergence", "dtype_policy"}
+        assert payload["meta"]["spec"]["name"] == "tiny"
+        assert set(payload["scenarios"]) == {"paper_default", "churn"}
+        conv = payload["convergence"]
+        assert all(c["points"] for c in conv)
+        p = str(tmp_path / "artifact.json")
+        write_artifact(p, payload)
+        back = load_artifact(p)
+        assert back["meta"]["spec"]["scales"] == [6]
+        rows = csv_rows(back)
+        assert rows and all(len(r.split(",")) == 3 for r in rows)
+
+    def test_reference_unreached_keeps_algorithm_time(self):
+        """When only the sync reference misses the target, the row must say
+        so (unreached_ref) and keep the algorithm's measured t_target."""
+        from repro.core.runner import RunResult
+        from repro.xp.sweep import RunRecord, SweepResult
+
+        def rec(alg, t_target):
+            res = RunResult(algorithm=alg, history=[], final_loss=1.0,
+                            final_metric=0.0, total_events=10,
+                            total_time=5.0, total_comm_copies=0,
+                            param_count=1)
+            return RunRecord(scenario="paper_default", algorithm=alg, n=6,
+                             seed=0, dtype="float32", wall_s=0.1,
+                             t_target=t_target, result=res)
+
+        spec = TINY.replace(algorithms=("ad_psgd",), seeds=(0,))
+        sweep = SweepResult(
+            spec=spec, records=[rec("dsgd_sync", None), rec("ad_psgd", 2.5)],
+            dtype_rows=[], scenario_meta={"paper_default": {}})
+        (row,) = speedup_rows(sweep)
+        assert math.isnan(row["speedup_mean"])
+        assert row["unreached"] == 0 and row["unreached_ref"] == 1
+        assert row["t_target_mean"] == pytest.approx(2.5)
+        line = [l for l in csv_rows({"speedup_vs_n": [row]})
+                if "/speedup/" in l][0]
+        assert "t_target=2.5" in line and "t_sync=unreached" in line
+        assert "unreached_ref=1/1" in line
+
+    def test_unreached_target_reports_nan_not_zero(self):
+        spec = TINY.replace(scenarios=("paper_default",), seeds=(0,),
+                            target_loss=1e-9)  # unreachable in 16 events
+        sweep = run_spec(spec)
+        rows = speedup_rows(sweep)
+        assert rows
+        for r in rows:
+            assert math.isnan(r["speedup_mean"])
+            assert r["unreached"] == r["n_seeds"]
+        for line in csv_rows(artifact_payload(sweep)):
+            if "/speedup/" in line:
+                assert "speedup_vs_sync=nan" in line
+                assert "t_target=unreached" in line
+                assert "=0.0" not in line.split(",", 2)[2]
+
+
+class TestDtypePolicy:
+    def test_bf16_worker_state(self):
+        tr = build_trainer(TINY, "ad_psgd", 6, seed=0, dtype="bfloat16")
+        for leaf in jax.tree.leaves(tr.W):
+            assert leaf.dtype == jnp.bfloat16
+        res = tr.run(max_events=8, eval_every=8)
+        assert np.isfinite(res.final_loss)
+        for leaf in jax.tree.leaves(tr._pools):
+            if jnp.issubdtype(leaf.dtype, jnp.floating):
+                assert leaf.dtype == jnp.bfloat16
+        assert tr.y.dtype == jnp.float32  # push-sum weights stay fp32
+
+    def test_fp32_default_unchanged(self):
+        tr = build_trainer(TINY, "ad_psgd", 6, seed=0)
+        assert all(l.dtype == jnp.float32 for l in jax.tree.leaves(tr.W))
+
+    @pytest.mark.parametrize("mode", ["scan", "per_event"])
+    def test_bf16_survives_dense_paths(self, mode):
+        """The dense scan must carry bf16 without promotion (a lax.scan
+        carry keeps its dtype), and the per-event step must not silently
+        promote the state back to fp32 after the first event."""
+        spec = TINY.replace(mode=mode)
+        tr = build_trainer(spec, "dsgd_sync", 6, seed=0, dtype="bfloat16")
+        res = tr.run(max_events=6, eval_every=6)
+        assert np.isfinite(res.final_loss)
+        for leaf in jax.tree.leaves(tr.W):
+            assert leaf.dtype == jnp.bfloat16
+
+    def test_bad_dtype_rejected(self):
+        with pytest.raises((ValueError, TypeError)):
+            build_trainer(TINY, "ad_psgd", 6, seed=0, dtype="int32")
+
+    def test_spec_threads_dtype(self):
+        spec = TINY.replace(dtype="bfloat16")
+        tr = build_trainer(spec, "dsgd_aau", 6, seed=0)
+        assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(tr.W))
