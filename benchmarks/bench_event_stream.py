@@ -1,31 +1,38 @@
 """Events/sec of the event-stream execution modes, at paper worker counts.
 
-Three consumers share one scheduler stream (AD-PSGD — the longest of the
-paper's baselines, one event per worker-finish):
+Three consumers share one scheduler stream, for each of the paper's async
+algorithms with distinct active-set shapes (AD-PSGD: constant A=2 pairs;
+DSGD-AAU: heavy-tailed finished cliques, the bucketed-ladder stress case;
+Prague: constant group-size cliques):
 
 - ``per_event``: one XLA dispatch + host batch refresh per event (legacy);
 - ``scan``: block-compiled dense scan — one dispatch per ``block_size``
   events, but every event still pays the O(n²·D) dense mix and O(n·D)
   gradients;
 - ``sparse_scan``: the active-set gather-compute-scatter scan — O(A²·D)
-  mix and O(A·D) gradients with A=2 for AD-PSGD, the path that makes
-  N∈{128, 256} (paper Figures 3–5 worker counts) run in CI time.
+  mix and O(A·D) gradients at the scheduler's lane-width ladder.  For
+  DSGD-AAU that ladder is multi-rung (``Scheduler.active_buckets``), and
+  the row records the static single-bucket throughput next to the
+  bucketed one so the ladder's win is in the artifact, not just the docs.
+
+Each row also records the measured per-bucket occupancy of the stream
+(``BucketedSparseEventBatch.occupancy``): events per rung and lane fill —
+the padding-waste numbers that motivated bucketing (a DSGD-AAU stream at
+N=256 packed to the static bound sits under 4% lane fill).
 
 Event *generation* (host-side numpy) is timed separately: it bounds every
-consumer from above.  Two generator variants are measured: the default
-sparse-native per-event stream (bit-exact with recorded runs — no dense
-``np.eye(n)`` per event, O(1) host work for single-edge schedulers), and
-the opt-in event-horizon batcher (``horizon=K``: vectorized K-draw RNG
-chunks + an argmin reorder buffer — deterministic but a different RNG-order
-realization, see core/baselines.py).
+consumer from above.  The opt-in event-horizon batcher is timed for the
+single-edge schedulers only (the others don't accept ``horizon=``).
 
-  python -m benchmarks.bench_event_stream [--paper-scale] [--smoke]
+  python -m benchmarks.bench_event_stream [--paper-scale] [--xl] [--smoke]
       # writes BENCH_event_stream.json
 
 All trainers are warmed up first (``DecentralizedTrainer.warmup`` compiles
 via a no-op dispatch), so the numbers compare steady-state throughput, not
-compile time.  ``per_event`` is skipped above N=64 (it would dominate the
-wall clock without adding information — the scan paths are the contenders).
+compile time.  ``per_event`` is skipped above N=64 and the dense scan above
+N=256 (each would dominate the wall clock without adding information —
+above those scales the sparse path is the only contender, which is the
+point of the bench).
 """
 from __future__ import annotations
 
@@ -42,13 +49,16 @@ from benchmarks.common import bench_sizes, csv_row
 from repro.core import topology
 from repro.core.baselines import make_scheduler
 from repro.core.runner import DecentralizedTrainer
+from repro.core.scheduler import BucketedSparseEventBatch
 from repro.core.straggler import StragglerModel
 from repro.data.synthetic import ClassificationData
 
-ALG = "ad_psgd"          # longest event stream of the paper's baselines
+ALGS = ("ad_psgd", "dsgd_aau", "prague")
 BLOCK_SIZE = 128
 D_IN, D_H, BATCH = 16, 16, 4
 PER_EVENT_MAX_N = 64     # legacy interpreter is noise above this scale
+SCAN_MAX_N = 256         # dense O(n²·D) mix: wall-clock filler above this
+HORIZON_ALGS = ("ad_psgd", "agp")   # single-edge scheds accept horizon=
 
 _JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_event_stream.json")
@@ -69,16 +79,17 @@ def _init(key):
 def _events_for(n: int, smoke: bool) -> int:
     if smoke:
         return 64  # a few blocks: proves the paths run, not their speed
-    return {128: 384, 256: 256}.get(n, 1024)
+    return {128: 384, 256: 256, 512: 192, 1024: 128}.get(n, 1024)
 
 
-def _make_sched(n: int, **kw):
+def _make_sched(alg: str, n: int, **kw):
     g = topology.erdos_renyi(n, max(0.15, 4.0 / n), seed=1)
     sm = StragglerModel(n=n, straggler_prob=0.1, slowdown=10.0, seed=0)
-    return make_scheduler(ALG, g, sm, **kw)
+    return make_scheduler(alg, g, sm, **kw)
 
 
-def _make_trainer(mode: str, n: int, block_size: int) -> DecentralizedTrainer:
+def _make_trainer(alg: str, mode: str, n: int, block_size: int,
+                  **sched_kw) -> DecentralizedTrainer:
     data = ClassificationData(n_workers=n, d=D_IN, samples_per_worker=64,
                               seed=0)
     # warmup() builds the pool before run() can size it, so pass an explicit
@@ -88,13 +99,14 @@ def _make_trainer(mode: str, n: int, block_size: int) -> DecentralizedTrainer:
     kw = ({"block_size": block_size, "batch_pool": 96}
           if mode in ("scan", "sparse_scan") else {})
     return DecentralizedTrainer(
-        _make_sched(n), _loss, _init,
+        _make_sched(alg, n, **sched_kw), _loss, _init,
         lambda w, s: data.batch(w, s, batch_size=BATCH),
         data.eval_batch(256), eta0=0.2, seed=0, mode=mode, **kw)
 
 
-def _events_per_sec(mode: str, n: int, events: int, block_size: int) -> float:
-    tr = _make_trainer(mode, n, block_size)
+def _events_per_sec(alg: str, mode: str, n: int, events: int,
+                    block_size: int, **sched_kw) -> float:
+    tr = _make_trainer(alg, mode, n, block_size, **sched_kw)
     tr.warmup()
     t0 = time.perf_counter()
     res = tr.run(max_events=events, eval_every=10 ** 9)
@@ -103,10 +115,10 @@ def _events_per_sec(mode: str, n: int, events: int, block_size: int) -> float:
     return res.total_events / wall
 
 
-def _generation_events_per_sec(n: int, events: int,
+def _generation_events_per_sec(alg: str, n: int, events: int,
                                horizon=None) -> float:
     """Host-side scheduler throughput alone: the event loop + event build."""
-    sched = _make_sched(n, horizon=horizon)
+    sched = _make_sched(alg, n, **({"horizon": horizon} if horizon else {}))
     stream = sched.events()
     next(stream)  # exclude generator setup / first-draw warmup
     t0 = time.perf_counter()
@@ -115,37 +127,62 @@ def _generation_events_per_sec(n: int, events: int,
     return events / (time.perf_counter() - t0)
 
 
-def run(paper_scale: bool = False, smoke: bool = False):
-    sizes = bench_sizes(paper_scale, smoke)
+def _bucket_occupancy(alg: str, n: int, events: int):
+    """Measured lane-width ladder + per-rung packing stats of the stream."""
+    sched = _make_sched(alg, n)
+    buckets = sched.active_buckets()
+    evs = list(itertools.islice(sched.events(), events))
+    occ = BucketedSparseEventBatch.from_events(evs, buckets=buckets,
+                                               edge_bound=sched.edge_bound())
+    return list(map(int, buckets)), occ.occupancy()
+
+
+def run(paper_scale: bool = False, smoke: bool = False, xl: bool = False):
+    sizes = bench_sizes(paper_scale, smoke, xl)
     results = []
-    for n in sizes:
+    for n, alg in itertools.product(sizes, ALGS):
         events = _events_for(n, smoke)
         block = min(BLOCK_SIZE, events)
-        gen = _generation_events_per_sec(n, events)
-        gen_horizon = _generation_events_per_sec(n, events, horizon=256)
-        scan = _events_per_sec("scan", n, events, block)
-        sparse = _events_per_sec("sparse_scan", n, events, block)
+        gen = _generation_events_per_sec(alg, n, events)
+        buckets, occupancy = _bucket_occupancy(alg, n, events)
+        sparse = _events_per_sec(alg, "sparse_scan", n, events, block)
         row = {
-            "n": n, "alg": ALG, "events": events, "block_size": block,
-            "gen_eps": gen, "gen_horizon_eps": gen_horizon,
-            "scan_eps": scan, "sparse_eps": sparse,
-            "sparse_speedup": sparse / scan,
+            "n": n, "alg": alg, "events": events, "block_size": block,
+            "gen_eps": gen, "sparse_eps": sparse,
+            "buckets": buckets, "occupancy": occupancy,
         }
-        yield csv_row(f"event_stream_gen_n{n}", 1e6 / gen,
+        yield csv_row(f"event_stream_gen_{alg}_n{n}", 1e6 / gen,
                       f"{gen:.0f} events/s generation")
-        yield csv_row(f"event_stream_gen_horizon_n{n}", 1e6 / gen_horizon,
-                      f"{gen_horizon:.0f} events/s horizon generation")
+        if alg in HORIZON_ALGS:
+            gen_h = _generation_events_per_sec(alg, n, events, horizon=256)
+            row["gen_horizon_eps"] = gen_h
+            yield csv_row(f"event_stream_gen_horizon_{alg}_n{n}",
+                          1e6 / gen_h, f"{gen_h:.0f} events/s horizon gen")
         if n <= PER_EVENT_MAX_N:
-            per_event = _events_per_sec("per_event", n, events, block)
+            per_event = _events_per_sec(alg, "per_event", n, events, block)
             row["per_event_eps"] = per_event
-            row["speedup"] = scan / per_event
-            yield csv_row(f"event_stream_per_event_n{n}", 1e6 / per_event,
-                          f"{per_event:.0f} events/s")
-        yield csv_row(f"event_stream_scan_n{n}", 1e6 / scan,
-                      f"{scan:.0f} events/s")
-        yield csv_row(
-            f"event_stream_sparse_n{n}", 1e6 / sparse,
-            f"{sparse:.0f} events/s ({sparse / scan:.1f}x vs dense scan)")
+            yield csv_row(f"event_stream_per_event_{alg}_n{n}",
+                          1e6 / per_event, f"{per_event:.0f} events/s")
+        if n <= SCAN_MAX_N:
+            scan = _events_per_sec(alg, "scan", n, events, block)
+            row["scan_eps"] = scan
+            row["sparse_speedup"] = sparse / scan
+            yield csv_row(f"event_stream_scan_{alg}_n{n}", 1e6 / scan,
+                          f"{scan:.0f} events/s")
+        if len(buckets) > 1 and n <= SCAN_MAX_N:
+            # the pre-ladder sparse path: every event padded to A=n.  Kept
+            # in the artifact so the bucketing win is a recorded number.
+            static = _events_per_sec(alg, "sparse_scan", n, events, block,
+                                     buckets=(n,))
+            row["sparse_static_eps"] = static
+            row["bucket_speedup"] = sparse / static
+            yield csv_row(
+                f"event_stream_sparse_static_{alg}_n{n}", 1e6 / static,
+                f"{static:.0f} events/s (single-bucket A={n} padding)")
+        vs = (f" ({row['sparse_speedup']:.1f}x vs dense scan)"
+              if "sparse_speedup" in row else "")
+        yield csv_row(f"event_stream_sparse_{alg}_n{n}", 1e6 / sparse,
+                      f"{sparse:.0f} events/s{vs}")
         results.append(row)
     payload = {
         "bench": "event_stream",
@@ -162,10 +199,13 @@ def run(paper_scale: bool = False, smoke: bool = False):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--xl", action="store_true",
+                    help="add N∈{512, 1024} (sparse path only)")
     ap.add_argument("--smoke", action="store_true")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    for row in run(paper_scale=args.paper_scale, smoke=args.smoke):
+    for row in run(paper_scale=args.paper_scale, smoke=args.smoke,
+                   xl=args.xl):
         print(row)
     if not args.smoke:
         print(f"# wrote {os.path.abspath(_JSON_PATH)}")

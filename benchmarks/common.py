@@ -25,20 +25,27 @@ ALGS = ("dsgd_aau", "dsgd_sync", "ad_psgd", "prague", "agp")
 
 # Worker-count presets: the CPU-friendly default suite, the paper's
 # N ∈ {128, 256} scale (Figures 3–5 at real worker counts — affordable via
-# the sparse active-set scan path), and a --smoke tier that only proves the
-# whole suite still imports and runs.
+# the sparse active-set scan path), the beyond-paper XL tier the bucketed
+# lane-width ladder unlocks (sparse path only — the dense modes are skipped
+# there by the benches that honor SCAN-style caps), and a --smoke tier that
+# only proves the whole suite still imports and runs.
 SCALES_SMOKE = (16,)
 SCALES_DEFAULT = (16, 64)
 SCALES_PAPER = (128, 256)
+SCALES_XL = (512, 1024)
 
 
-def bench_sizes(paper_scale: bool = False, smoke: bool = False):
+def bench_sizes(paper_scale: bool = False, smoke: bool = False,
+                xl: bool = False):
     """Worker counts a bench should sweep under the harness flags."""
     if smoke:
         return SCALES_SMOKE
-    if paper_scale:
-        return SCALES_DEFAULT + SCALES_PAPER
-    return SCALES_DEFAULT
+    sizes = SCALES_DEFAULT
+    if paper_scale or xl:
+        sizes = sizes + SCALES_PAPER
+    if xl:
+        sizes = sizes + SCALES_XL
+    return sizes
 
 
 def make_classification_trainer(alg: str, n: int, *, straggler_prob=0.1,

@@ -1,16 +1,27 @@
 """Benchmark harness: one module per paper table/figure.
 
-  python -m benchmarks.run [--paper-scale] [--smoke] [--only convergence,roofline]
+  python -m benchmarks.run [--paper-scale] [--xl] [--smoke]
+      [--only convergence,roofline] [--profile]
 
 Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
 Default scale finishes on CPU in minutes; --paper-scale reproduces the
-paper's N∈{128, 256} settings (slow); --smoke runs every bench at N=16 for
-a few blocks — a fast importable-and-runnable check to pair with the tier-1
-pytest suite (it never overwrites recorded BENCH_*.json results).
+paper's N∈{128, 256} settings (slow); --xl adds N∈{512, 1024} to the
+benches that support it (sparse path only); --smoke runs every bench at
+N=16 for a few blocks — a fast importable-and-runnable check to pair with
+the tier-1 pytest suite (it never overwrites recorded BENCH_*.json
+results).
+
+--profile wraps each selected bench in ``jax.profiler.trace`` and prints
+the per-bench trace directory (open with TensorBoard or Perfetto).  Pair
+it with ``--only`` and ``--smoke`` to keep traces small: a full bench
+traces every dispatch, and the trace grows with wall time.
 """
 import argparse
+import contextlib
 import inspect
+import os
 import sys
+import tempfile
 import time
 
 MODULES = ("convergence", "walltime", "speedup", "communication",
@@ -20,31 +31,56 @@ MODULES = ("convergence", "walltime", "speedup", "communication",
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--paper-scale", action="store_true")
+    ap.add_argument("--xl", action="store_true",
+                    help="add N∈{512, 1024} where a bench supports it")
     ap.add_argument("--smoke", action="store_true",
                     help="N=16, a few blocks per bench: fast CI check")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(MODULES))
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap each bench in jax.profiler.trace and print "
+                         "the trace directory")
     args = ap.parse_args()
     chosen = args.only.split(",") if args.only else list(MODULES)
+
+    trace_root = None
+    if args.profile:
+        trace_root = tempfile.mkdtemp(prefix="bench-trace-")
 
     print("name,us_per_call,derived")
     failures = 0
     for name in chosen:
         mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        params = inspect.signature(mod.run).parameters
         kw = {"paper_scale": args.paper_scale}
-        if "smoke" in inspect.signature(mod.run).parameters:
+        if "smoke" in params:
             kw["smoke"] = args.smoke
         elif args.smoke:
             print(f"# bench_{name} has no smoke mode; running at default "
                   "scale", file=sys.stderr)
+        if "xl" in params:
+            kw["xl"] = args.xl
+        elif args.xl:
+            print(f"# bench_{name} has no xl scale; running at default "
+                  "scale", file=sys.stderr)
+        profiling = contextlib.nullcontext()
+        if trace_root is not None:
+            import jax  # deferred: keep --help / arg errors jax-free
+            trace_dir = os.path.join(trace_root, name)
+            profiling = jax.profiler.trace(trace_dir)
+            print(f"# profiling bench_{name} -> {trace_dir}",
+                  file=sys.stderr)
         t0 = time.time()
         try:
-            for row in mod.run(**kw):
-                print(row)
+            with profiling:
+                for row in mod.run(**kw):
+                    print(row)
         except Exception as e:  # a failing table is a bug, not a skip
             failures += 1
             print(f"{name},0.0,ERROR={e!r}")
         print(f"# bench_{name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if trace_root is not None:
+        print(f"# traces under {trace_root}", file=sys.stderr)
     return 1 if failures else 0
 
 

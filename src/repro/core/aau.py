@@ -360,12 +360,28 @@ def sparse_gossip_scan(
         Sn = jax.tree.map(lambda s, w: jnp.where(expand(rm, w) > 0, w, s),
                           Sa, Wn)
         # -- scatter -----------------------------------------------------
-        W = jax.tree.map(
-            lambda w, rows: w.at[sidx].set(rows.astype(w.dtype), mode="drop"),
-            W, Wn)
-        S = jax.tree.map(
-            lambda s, rows: s.at[sidx].set(rows.astype(s.dtype), mode="drop"),
-            S, Sn)
+        if use_kernel:
+            # kernel scatter-into-carry: the (n, ...) parameter leaves are
+            # updated through input/output aliasing (only the A active
+            # windows are written) instead of XLA's fresh-buffer scatter;
+            # the O(n) vector leaves (y, ptr) stay on the cheap XLA path.
+            W = jax.tree.map(
+                lambda w, rows: sparse_ops.sparse_scatter_rows(
+                    w, rows.astype(w.dtype), workers),
+                W, Wn)
+            S = jax.tree.map(
+                lambda s, rows: sparse_ops.sparse_scatter_rows(
+                    s, rows.astype(s.dtype), workers),
+                S, Sn)
+        else:
+            W = jax.tree.map(
+                lambda w, rows: w.at[sidx].set(rows.astype(w.dtype),
+                                               mode="drop"),
+                W, Wn)
+            S = jax.tree.map(
+                lambda s, rows: s.at[sidx].set(rows.astype(s.dtype),
+                                               mode="drop"),
+                S, Sn)
         y = y.at[sidx].set(ya.astype(y.dtype), mode="drop")
         ptr = ptr.at[sidx].set(ptra + rm.astype(ptr.dtype), mode="drop")
         return (W, S, y, ptr), None
@@ -381,12 +397,19 @@ def build_sparse_event_scan(loss_fn: Callable, use_kernel: bool = False):
 
     One compiled call advances the stacked state through E active-set
     events (``SparseEventBatch`` arrays).  The lane width A and block length
-    E are baked into the trace — both are fixed per scheduler/run, so a
-    single compiled program serves the whole stream.
+    E are baked into the trace — fixed per scheduler *bucket*, so a handful
+    of compiled programs (one per (A, E) shape the dispatcher emits) serves
+    the whole stream.
+
+    The ``(W, S, y, ptr)`` carry buffers are **donated**: the caller always
+    threads the returned carry into the next block and never reuses the
+    arguments (the runner's contract), so XLA reuses their n-row buffers
+    in place instead of allocating a fresh copy per block — at N=1024 the
+    W+S stack is ~0.7 GB of float32, twice per block without donation.
     """
     grad_fn = jax.grad(loss_fn)
 
-    @jax.jit
+    @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
     def block(W, S, y, ptr, pools, workers_seq, P_sub_seq, grad_masks,
               restart_masks, etas):
         return sparse_gossip_scan(

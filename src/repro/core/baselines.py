@@ -12,7 +12,13 @@ int32 lanes plus a 2×2 submatrix, never an (n, n) matrix, which keeps event
 consumer's ceiling at paper scale.  Per-scheduler ``edge_bound`` /
 ``active_bound`` overrides keep the packed arrays at their true width
 (AD-PSGD/AGP touch one edge per event, Prague at most one group's clique)
-instead of the full graph's.
+instead of the full graph's.  Because every baseline's events all share one
+size, the bucketed lane-width contract (``Scheduler.active_buckets``)
+stays at its degenerate single-bucket default — ``(2,)`` for the
+single-edge pair, ``(group_size,)`` for Prague — and the runner's sparse
+dispatch is byte-for-byte the single-program path it always was; only
+DSGD-AAU, whose finished-clique size is a distribution, carries a
+multi-rung ladder.
 
 Event-horizon batching: the single-edge schedulers accept ``horizon=K`` to
 pre-draw K future completion-time factors and K neighbor picks in two

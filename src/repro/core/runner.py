@@ -16,10 +16,18 @@ Execution model — block-compiled by default (``mode="scan"``):
   (:class:`~repro.core.scheduler.SparseEventBatch` + ``sparse_gossip_scan``):
   each event gathers only the workers it touches, evaluates gradients for
   those lanes alone, mixes with the A×A consensus submatrix, and scatters
-  back — O(active_bound·D) per event instead of O(n²·D), the representation
-  that makes paper-scale N=256 streams affordable.  Schedulers whose events
-  are global barriers (sync DSGD, ``Scheduler.global_events``) automatically
-  fall back to the dense scan.
+  back — O(A·D) per event instead of O(n²·D), the representation that makes
+  paper-scale N≥256 streams affordable.  The lane width A follows the
+  scheduler's ``active_buckets()`` ladder: single-bucket schedulers
+  (AD-PSGD/AGP at A=2, Prague at the group size) compile one block program,
+  while schedulers whose event sizes are a *distribution* (DSGD-AAU's
+  finished cliques) are packed per bucket and dispatched segment-by-segment
+  in stream order (``BucketedSparseEventBatch`` — see
+  ``_dispatch_bucketed``), so the typical small event stops paying the
+  worst-case event's padding.  Schedulers whose events are global barriers
+  (sync DSGD, ``Scheduler.global_events``) automatically fall back to the
+  dense scan.  The sparse block donates its carry buffers — the n-row state
+  is updated in place across blocks rather than copied per dispatch.
 - Per-worker batches come from a pre-drawn on-device sample pool indexed by
   a restart counter the scan carries.  By default the pool is sized from the
   first run's bound — ``max_events`` directly, or a ``max_time`` bound via a
@@ -50,7 +58,8 @@ import numpy as np
 
 from repro.core.aau import (build_event_scan, build_event_step,
                             build_sparse_event_scan, debiased_average)
-from repro.core.scheduler import EventBatch, Scheduler, SparseEventBatch
+from repro.core.scheduler import (BucketedSparseEventBatch, EventBatch,
+                                  Scheduler, SparseEventBatch)
 from repro.utils.tree import tree_size, tree_stack
 
 
@@ -260,6 +269,13 @@ class DecentralizedTrainer:
         if self._sparse is None:
             self._sparse = build_sparse_event_scan(
                 self.loss_fn, use_kernel=self.use_kernel)
+            # The sparse block donates its (W, S, y, ptr) carry arguments.
+            # With same_init the snapshot stack S still *is* W (one shared
+            # buffer) until the first update — donating that buffer through
+            # two arguments is an XLA error, so break the alias once here.
+            if any(w is s for w, s in zip(jax.tree.leaves(self.W),
+                                          jax.tree.leaves(self.S))):
+                self.S = jax.tree.map(jnp.array, self.S)
         self._ensure_pools(max_events, max_time)
 
     def _etas_for(self, batch_E: int, valid_E: int, rounds: int) -> np.ndarray:
@@ -304,6 +320,59 @@ class DecentralizedTrainer:
             jnp.asarray(etas, dtype=jnp.float32),
         )
 
+    # Base chunk length for the narrowest bucket of a multi-bucket ladder.
+    # Chunks must be short: a DSGD-AAU stream switches buckets every ~4
+    # events at N=256, so a chunk longer than the typical same-bucket
+    # segment just pads with no-op events.  They must also be *one fixed
+    # shape per bucket*: each distinct (A, E) pair compiles its own block
+    # program, and with segment-length-sized shapes the tracing cost (tens
+    # of XLA compiles) swamped the event stream it was meant to speed up.
+    _CHUNK_QUANTUM = 32
+
+    @staticmethod
+    def _bucket_cap(buckets: Tuple[int, ...], b: int, target: int) -> int:
+        """Fixed chunk length for bucket ``b`` of the ladder.
+
+        Scaled inversely to the *square* of the lane-width ratio —
+        ``quantum · (buckets[0] / buckets[b])²`` — which tracks both costs
+        that grow with lane width: the O(A²·D) mix per event and, more
+        importantly on a fragmented stream, the no-op padding.  Measured
+        DSGD-AAU streams at N=256 spend ~93% of events in the first rung in
+        ~15-event runs, but the wide rungs fire in 1–2-event bursts — a
+        linear cap (quantum·b0/A) padded those bursts 4–8× with wide-lane
+        no-ops and cost more than the dense fallback it replaced; the
+        quadratic cap pins wide-bucket chunks at 1–2 events (≈ their true
+        burst length) and lifted bucketed throughput from ~3× to ~5–6× the
+        static-bound path.
+        """
+        quantum = min(target, DecentralizedTrainer._CHUNK_QUANTUM)
+        return max(1, (quantum * buckets[0] * buckets[0])
+                   // (buckets[b] * buckets[b]))
+
+    def _dispatch_bucketed(self, bucketed: BucketedSparseEventBatch,
+                           rounds: int, target: int) -> None:
+        """Advance the carry through a bucketed block, in stream order.
+
+        State updates are sequential, so buckets are *not* replayed whole:
+        the stream's maximal same-bucket runs (``segment_batches`` — each
+        contiguous both in the stream and in its bucket's packed arrays)
+        are dispatched in order, every segment chopped into fixed-length
+        chunks at its bucket's lane width (short chunks padded with no-op
+        events — ``SparseEventBatch.pad_to`` — to keep one compiled shape
+        per bucket).  Events therefore execute in exactly the per-event
+        order — the bucketed path's results are bit-exact against the dense
+        scan — while a typical DSGD-AAU event pays for ~16 lanes instead
+        of n.
+        """
+        for b, off, seg in bucketed.segment_batches():
+            cap = self._bucket_cap(bucketed.buckets, b, target)
+            start = 0
+            while start < seg.E:
+                stop = min(seg.E, start + cap)
+                self._dispatch_sparse_block(
+                    seg.slice(start, stop), rounds + off + start, cap)
+                start = stop
+
     def warmup(self) -> None:
         """Compile this trainer's update and eval with no-op dispatches.
 
@@ -319,11 +388,24 @@ class DecentralizedTrainer:
         n = self.n
         if self.mode == "sparse_scan":
             self._ensure_sparse()
-            noop = SparseEventBatch.from_events(
-                [_identity_event(n)],
-                active_bound=self.scheduler.active_bound(),
-                edge_bound=self.scheduler.edge_bound()).pad_to(self.block_size)
-            self._dispatch_sparse_block(noop, rounds=0)
+            buckets = self.scheduler.active_buckets()
+            ebound = self.scheduler.edge_bound()
+            if len(buckets) > 1:
+                # one compiled block program per bucket, at the chunk cap
+                # its full segments will dispatch with
+                for b, A in enumerate(buckets):
+                    cap = self._bucket_cap(buckets, b, self.block_size)
+                    noop = SparseEventBatch.from_events(
+                        [_identity_event(n)], active_bound=A,
+                        edge_bound=min(ebound, max(1, A * (A - 1) // 2))
+                    ).pad_to(cap)
+                    self._dispatch_sparse_block(noop, rounds=0, target=cap)
+            else:
+                noop = SparseEventBatch.from_events(
+                    [_identity_event(n)],
+                    active_bound=self.scheduler.active_bound(),
+                    edge_bound=ebound).pad_to(self.block_size)
+                self._dispatch_sparse_block(noop, rounds=0)
             self.y.block_until_ready()
             self._warm_eval()
             return
@@ -405,6 +487,7 @@ class DecentralizedTrainer:
         if sparse:
             self._ensure_sparse(max_events, max_time)
             abound = self.scheduler.active_bound()
+            buckets = self.scheduler.active_buckets()
         else:
             self._ensure_scan(max_events, max_time)
         self._ensure_eval_accum()
@@ -448,7 +531,12 @@ class DecentralizedTrainer:
                 exhausted and buf)
             if not flush:
                 continue
-            if sparse:
+            if sparse and len(buckets) > 1:
+                self._dispatch_bucketed(
+                    BucketedSparseEventBatch.from_events(
+                        buf, buckets=buckets, edge_bound=bound),
+                    rounds, target)
+            elif sparse:
                 self._dispatch_sparse_block(
                     SparseEventBatch.from_events(
                         buf, active_bound=abound, edge_bound=bound),

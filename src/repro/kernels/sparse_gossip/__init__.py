@@ -1,6 +1,9 @@
 from repro.kernels.sparse_gossip import ops, ref
-from repro.kernels.sparse_gossip.kernel import sparse_gossip_pallas
+from repro.kernels.sparse_gossip.kernel import (scatter_rows_pallas,
+                                                sparse_gossip_pallas)
 from repro.kernels.sparse_gossip.ops import (sparse_gossip_apply,
-                                             sparse_gossip_rows)
+                                             sparse_gossip_rows,
+                                             sparse_scatter_rows)
 from repro.kernels.sparse_gossip.ref import (sparse_gossip_apply_ref,
-                                             sparse_gossip_ref)
+                                             sparse_gossip_ref,
+                                             sparse_scatter_rows_ref)

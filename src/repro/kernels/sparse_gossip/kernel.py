@@ -93,3 +93,76 @@ def sparse_gossip_pallas(W: jax.Array, G: jax.Array, P_sub: jax.Array,
         out_shape=jax.ShapeDtypeStruct((A, D), W.dtype),
         interpret=interpret,
     )(workers, P_sub, Q_sub, W, G)
+
+
+def _scatter_rows_kernel(workers_ref, rows_ref, x_ref, o_ref):
+    # workers_ref: (A,) scalar-prefetch; x_ref / o_ref: the same (1, Dt)
+    # window of the aliased carry at row max(workers[a], 0); rows_ref: the
+    # compact row of lane a for valid lanes, of lane *0* for padded lanes
+    # (see the index map).  A valid lane replaces its window with its
+    # compact row.  A padded lane (workers[a] < 0, clamped to row 0) must
+    # write row 0's *final* content back: that is lane 0's compact row when
+    # worker 0 is active (workers are sorted valid-first, so 0 ∈ workers ⟺
+    # workers[0] == 0 — and rows_ref already holds that row), else the
+    # gathered window.  Deciding from workers[0] rather than re-reading the
+    # carry keeps the kernel correct whether the x gather observes the
+    # aliased buffer's updates (TPU read-through) or a stale pre-kernel
+    # copy (interpret mode).
+    a = pl.program_id(1)
+    keep_rows = (workers_ref[a] >= 0) | (workers_ref[0] == 0)
+    o_ref[...] = jnp.where(keep_rows, rows_ref[...],
+                           x_ref[...]).astype(o_ref.dtype)
+
+
+def scatter_rows_pallas(X: jax.Array, rows: jax.Array, workers: jax.Array, *,
+                        block_d: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """Scatter compact active-set rows into the carry, in place.
+
+    The scatter half of the gather-compute-scatter contract, moved into the
+    kernel: ``X`` (N, D) is **aliased to the output** (donated by the
+    caller), so only the A windows named by ``workers`` are ever written —
+    the other N−A rows are never touched, never copied, never DMA'd.  That
+    replaces the XLA ``.at[workers].set``, whose lowering materializes a
+    fresh (N, D) buffer per event — O(N·D) carry traffic for an O(A·D)
+    logical update, the term that grows linearly with n and capped the
+    sparse path's scaling (see BENCH_event_stream.json N≥128).
+
+    Race-freedom: valid active-set indices are unique per event and padded
+    lanes sit at the tail of the sorted lane axis, so the only repeated
+    output window is the trailing run of padded-lane row-0 writes — and the
+    kernel makes each of those re-write row 0's final content (see
+    ``_scatter_rows_kernel``), so repetition is idempotent.
+
+    rows: (A, D) compact rows; workers: (A,) int32 — sorted valid lanes
+    first, ``-1`` padding trailing (the SparseEventBatch lane contract; the
+    padded-lane writeback relies on it).  Returns the updated (N, D) carry
+    (the same buffer when donation applies).
+    """
+    N, D = X.shape
+    A = workers.shape[0]
+    assert rows.shape == (A, D), (rows.shape, (A, D))
+    assert D % block_d == 0, (D, block_d)
+    grid = (D // block_d, A)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            # padded lanes read lane 0's row (the row-0 writeback candidate)
+            pl.BlockSpec((1, block_d),
+                         lambda d, a, workers: (jnp.where(workers[a] >= 0,
+                                                          a, 0), d)),
+            pl.BlockSpec((1, block_d),
+                         lambda d, a, workers: (jnp.maximum(workers[a], 0), d)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_d), lambda d, a, workers: (jnp.maximum(workers[a], 0), d)),
+    )
+    return pl.pallas_call(
+        _scatter_rows_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, D), X.dtype),
+        # operand indices count the scalar-prefetch arg: (workers, rows, X)
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(workers, rows, X)

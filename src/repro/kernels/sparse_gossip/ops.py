@@ -23,7 +23,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.sparse_gossip.kernel import sparse_gossip_pallas
+from repro.kernels.sparse_gossip.kernel import (scatter_rows_pallas,
+                                                sparse_gossip_pallas)
 
 _SUBLANE = 8
 
@@ -92,3 +93,43 @@ def sparse_gossip_apply(W: jax.Array, G: jax.Array, P_sub: jax.Array,
                               block_d=block_d, interpret=interpret)
     sidx = jnp.where(workers >= 0, workers, W.shape[0])
     return W.at[sidx].set(rows.astype(W.dtype), mode="drop")
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"),
+                   donate_argnums=(0,))
+def sparse_scatter_rows(X: jax.Array, rows: jax.Array, workers: jax.Array, *,
+                        block_d: int = 512,
+                        interpret: bool | None = None) -> jax.Array:
+    """Scatter compact (A, ...) rows into the (N, ...) carry leaf, in place.
+
+    The kernel-side replacement for ``X.at[workers].set(rows, mode="drop")``:
+    ``X`` is donated and aliased straight through ``scatter_rows_pallas``, so
+    valid lanes overwrite exactly their A rows and the other N−A rows are
+    never copied — the XLA scatter's O(N·D) fresh-buffer lowering becomes
+    O(A·D) window writes.  ``-1`` lanes (stream padding *and* the sublane
+    padding added here) write their gathered window back unchanged.
+
+    Called standalone (outside a wrapping jit) the donation is real: passing
+    ``X`` again afterwards raises JAX's donated-buffer error, which
+    tests/test_bucketed_stream.py pins.  When traced inside the event-scan
+    jit the inner donation is a no-op and XLA's own aliasing takes over.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    N = X.shape[0]
+    A = workers.shape[0]
+    flat_x = X.reshape(N, -1)
+    flat_r = rows.reshape(A, -1).astype(flat_x.dtype)
+    idx = workers.astype(jnp.int32)
+    D = flat_x.shape[1]
+    Dp = _pad_up(D, block_d)
+    Ap = _pad_up(A, _SUBLANE)
+    if Dp != D:
+        flat_x = jnp.pad(flat_x, ((0, 0), (0, Dp - D)))
+        flat_r = jnp.pad(flat_r, ((0, 0), (0, Dp - D)))
+    if Ap != A:
+        flat_r = jnp.pad(flat_r, ((0, Ap - A), (0, 0)))
+        idx = jnp.pad(idx, (0, Ap - A), constant_values=-1)
+    out = scatter_rows_pallas(flat_x, flat_r, idx, block_d=block_d,
+                              interpret=interpret)
+    return out[:, :D].reshape(X.shape)

@@ -31,3 +31,11 @@ def sparse_gossip_apply_ref(W: jax.Array, G: jax.Array, P_sub: jax.Array,
     rows = sparse_gossip_ref(W, G, P_sub, Q_sub, workers)
     sidx = jnp.where(workers >= 0, workers, W.shape[0])
     return W.at[sidx].set(rows.astype(W.dtype), mode="drop")
+
+
+def sparse_scatter_rows_ref(X: jax.Array, rows: jax.Array,
+                            workers: jax.Array) -> jax.Array:
+    """Oracle for the in-place scatter: valid lanes replace their row,
+    ``-1``-padded lanes drop, every other row of X is untouched."""
+    sidx = jnp.where(workers >= 0, workers, X.shape[0])
+    return X.at[sidx].set(rows.astype(X.dtype), mode="drop")

@@ -2,9 +2,12 @@
 
 ``paper_figures`` is the recorded configuration behind
 ``BENCH_paper_figures.json`` — Figures 3–5 at N ∈ {32, 64, 128, 256} on the
-sparse path under three scenarios.  ``smoke`` is the CI dry-run tier: every
-registered scenario at N = 8 for a handful of events, proving the whole
-harness (spec → sweep → artifact) stays importable and runnable.
+sparse path under three scenarios.  ``paper_figures_xl`` extends it to
+N ∈ {512, 1024} (bucketed sparse path, no synchronous reference).
+``smoke`` is the CI dry-run tier: every registered scenario at N = 8 for a
+handful of events, proving the whole harness (spec → sweep → artifact)
+stays importable and runnable; ``smoke_xl`` is its N = 512 sibling that
+pins the multi-bucket dispatch path in CI.
 """
 from __future__ import annotations
 
@@ -34,6 +37,34 @@ def paper_figures_spec() -> ExperimentSpec:
     )
 
 
+def paper_figures_xl_spec() -> ExperimentSpec:
+    """Beyond-paper scales the bucketed lane-width ladder unlocks.
+
+    N ∈ {512, 1024} on the sparse path only.  No synchronous reference —
+    a barrier over 1024 workers would dominate the sweep's wall clock for
+    a speedup denominator the paper never reports at this scale (the
+    artifact keeps convergence rows; ``speedup_rows`` degrades to empty).
+    """
+    return ExperimentSpec(
+        name="paper_figures_xl",
+        algorithms=("dsgd_aau", "ad_psgd", "prague"),
+        reference=None,
+        scenarios=("paper_default", "heavy_tail"),
+        scales=(512, 1024),
+        seeds=(0,),
+        mode="sparse_scan",
+        block_size=128,
+        # event-bounded, not time-bounded: virtual-time horizons calibrated
+        # at N≤256 over-run at 4× the workers (events/second of virtual
+        # time grows with n), and the point here is path coverage + wall
+        # throughput, not matching a figure.
+        max_events=512,
+        max_time=None,
+        eval_every=64,
+        target_loss=0.9,
+    )
+
+
 def smoke_spec() -> ExperimentSpec:
     return ExperimentSpec(
         name="smoke",
@@ -52,9 +83,35 @@ def smoke_spec() -> ExperimentSpec:
     )
 
 
+def smoke_xl_spec() -> ExperimentSpec:
+    """CI tier for the bucketed sparse path at N=512.
+
+    One multi-rung algorithm (DSGD-AAU — the only scheduler whose
+    ``active_buckets`` ladder has more than one rung at default settings)
+    for a few blocks: proves the bucketed dispatch compiles and runs at a
+    scale where the static single-bucket padding would be prohibitive.
+    """
+    return ExperimentSpec(
+        name="smoke_xl",
+        algorithms=("dsgd_aau",),
+        reference=None,
+        scenarios=("paper_default",),
+        scales=(512,),
+        seeds=(0,),
+        mode="sparse_scan",
+        block_size=32,
+        max_events=48,
+        max_time=None,
+        eval_every=24,
+        target_loss=0.9,
+    )
+
+
 PRESETS = {
     "paper_figures": paper_figures_spec,
+    "paper_figures_xl": paper_figures_xl_spec,
     "smoke": smoke_spec,
+    "smoke_xl": smoke_xl_spec,
 }
 
 

@@ -1,0 +1,309 @@
+"""Bucketed dynamic active-sets: the lane-width ladder contract
+(``Scheduler.active_buckets``), stream-order-preserving bucketed packing
+(``BucketedSparseEventBatch``), the bucketed ``sparse_scan`` dispatch, and
+the in-place scatter kernel with its carry-donation contract.
+
+The bucketed path must be an *exact* re-execution of the dense compiled
+scan: same scheduler seed ⇒ same ``(W, S, y, ptr)`` trajectory and recorded
+history, while each event pays only for its bucket's lane width.  N is kept
+small and the DSGD-AAU ladder forced fine (``buckets=(4, 8, 16)``) so the
+stream genuinely crosses buckets every few events.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.baselines import make_scheduler
+from repro.core.runner import DecentralizedTrainer
+from repro.core.scheduler import (BucketedSparseEventBatch,
+                                  SparseEventBatch, bucket_index,
+                                  geometric_buckets)
+from repro.core.straggler import StragglerModel
+from repro.data.synthetic import ClassificationData
+from repro.kernels.sparse_gossip import (scatter_rows_pallas,
+                                         sparse_scatter_rows,
+                                         sparse_scatter_rows_ref)
+
+N = 16
+LADDER = (4, 8, 16)
+DATA = ClassificationData(n_workers=N, d=16, n_classes=4,
+                          samples_per_worker=64, seed=0)
+
+
+def loss_fn(params, batch):
+    logits = batch["x"] @ params["w"]
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, batch["y"][:, None], axis=1))
+
+
+def init_fn(key):
+    return {"w": jax.random.normal(key, (16, 4)) * 0.1}
+
+
+def _sched(alg, seed=0, **kw):
+    g = topology.erdos_renyi(N, 0.4, seed=3)
+    sm = StragglerModel(n=N, straggler_prob=0.2, slowdown=6.0, seed=seed)
+    return make_scheduler(alg, g, sm, **kw)
+
+
+def _trainer(alg, mode, seed=0, sched_kw=None, **kw):
+    return DecentralizedTrainer(
+        _sched(alg, seed, **(sched_kw or {})), loss_fn, init_fn,
+        lambda w, s: DATA.batch(w, s, batch_size=8),
+        DATA.eval_batch(64), eta0=0.2, eta_decay=0.99, seed=seed,
+        mode=mode, **kw)
+
+
+def _aau_bucketed(evs, buckets=LADDER):
+    return BucketedSparseEventBatch.from_events(evs, buckets=buckets)
+
+
+class TestLadderContract:
+    def test_geometric_buckets_defaults(self):
+        assert geometric_buckets(256) == (16, 64, 256)
+        assert geometric_buckets(1024) == (16, 64, 256, 1024)
+        assert geometric_buckets(512) == (16, 64, 256, 512)
+        assert geometric_buckets(16) == (16,)
+        assert geometric_buckets(8) == (8,)
+        assert geometric_buckets(300) == (16, 64, 256, 300)
+
+    def test_bucket_index_picks_smallest_fitting_rung(self):
+        buckets = (4, 8, 16)
+        assert bucket_index(buckets, 1) == 0
+        assert bucket_index(buckets, 4) == 0
+        assert bucket_index(buckets, 5) == 1
+        assert bucket_index(buckets, 16) == 2
+        with pytest.raises(ValueError):
+            bucket_index(buckets, 17)
+
+    @pytest.mark.parametrize("alg", ["ad_psgd", "prague", "agp",
+                                     "dsgd_sync"])
+    def test_constant_size_schedulers_stay_single_bucket(self, alg):
+        sched = _sched(alg)
+        buckets = sched.active_buckets()
+        assert len(buckets) == 1
+        assert buckets[-1] == sched.active_bound()
+
+    def test_aau_ladder_defaults_and_override(self):
+        assert _sched("dsgd_aau").active_buckets() == (N,)  # n ≤ base rung
+        sched = _sched("dsgd_aau", buckets=LADDER)
+        assert sched.active_buckets() == LADDER
+        assert sched.active_buckets()[-1] == sched.active_bound()
+
+    def test_aau_ladder_must_end_at_n(self):
+        with pytest.raises(ValueError, match="must end at n"):
+            _sched("dsgd_aau", buckets=(4, 8))
+
+
+class TestBucketedPacking:
+    def test_round_trip_reconstructs_stream_order(self):
+        sched = _sched("dsgd_aau", buckets=LADDER)
+        evs = list(itertools.islice(sched.events(), 24))
+        bucketed = _aau_bucketed(evs)
+        assert bucketed.E == 24
+        assert len(set(bucketed.event_bucket.tolist())) > 1  # truly mixed
+        for orig, back in zip(evs, bucketed.to_events(N)):
+            assert back.k == orig.k
+            assert back.time == pytest.approx(orig.time)
+            np.testing.assert_array_equal(back.grad_workers,
+                                          orig.grad_workers)
+            np.testing.assert_array_equal(back.restart_workers,
+                                          orig.restart_workers)
+            np.testing.assert_allclose(back.P, orig.P)
+            assert back.active_edges == orig.active_edges
+            assert back.param_copies_sent == orig.param_copies_sent
+
+    def test_events_land_in_smallest_fitting_bucket(self):
+        sched = _sched("dsgd_aau", buckets=LADDER)
+        evs = list(itertools.islice(sched.events(), 24))
+        bucketed = _aau_bucketed(evs)
+        for ev, b in zip(evs, bucketed.event_bucket):
+            size = int(ev.grad_workers.sum())
+            assert bucket_index(LADDER, size) == b
+            assert size <= LADDER[b]
+
+    def test_segments_tile_the_stream_in_order(self):
+        sched = _sched("dsgd_aau", buckets=LADDER)
+        evs = list(itertools.islice(sched.events(), 32))
+        bucketed = _aau_bucketed(evs)
+        covered = []
+        prev_bucket = None
+        for b, start, stop in bucketed.segments():
+            assert stop > start
+            assert b != prev_bucket  # maximal runs: no adjacent repeats
+            prev_bucket = b
+            assert (bucketed.event_bucket[start:stop] == b).all()
+            covered.extend(range(start, stop))
+        assert covered == list(range(32))
+
+    def test_segment_batches_match_per_event_sizes(self):
+        sched = _sched("dsgd_aau", buckets=LADDER)
+        evs = list(itertools.islice(sched.events(), 32))
+        bucketed = _aau_bucketed(evs)
+        sizes = [int(ev.grad_workers.sum()) for ev in evs]
+        seen = 0
+        for b, off, seg in bucketed.segment_batches():
+            assert seg.A == LADDER[b]
+            np.testing.assert_array_equal(
+                seg.n_workers, sizes[off:off + seg.E])
+            seen += seg.E
+        assert seen == 32
+
+    def test_slice_is_a_stream_window(self):
+        sched = _sched("ad_psgd")
+        evs = list(itertools.islice(sched.events(), 10))
+        batch = SparseEventBatch.from_events(evs, active_bound=2,
+                                             edge_bound=1)
+        part = batch.slice(3, 7)
+        assert part.E == 4 and part.k0 == batch.k0 + 3
+        np.testing.assert_array_equal(part.workers, batch.workers[3:7])
+        np.testing.assert_array_equal(part.P_sub, batch.P_sub[3:7])
+        for orig, back in zip(evs[3:7], part.to_events(N)):
+            assert back.k == orig.k
+            np.testing.assert_allclose(back.P, orig.P)
+
+    def test_occupancy_accounts_for_every_event(self):
+        sched = _sched("dsgd_aau", buckets=LADDER)
+        evs = list(itertools.islice(sched.events(), 40))
+        occ = _aau_bucketed(evs).occupancy()
+        assert [o["A"] for o in occ] == list(LADDER)
+        assert sum(o["events"] for o in occ) == 40
+        for o in occ:
+            if o["events"]:
+                assert 0.0 < o["lane_fill"] <= 1.0
+
+    def test_single_bucket_degenerates_to_plain_batch(self):
+        sched = _sched("ad_psgd")
+        evs = list(itertools.islice(sched.events(), 8))
+        bucketed = BucketedSparseEventBatch.from_events(evs, buckets=(2,))
+        segs = list(bucketed.segments())
+        assert segs == [(0, 0, 8)]
+        (b, off, seg), = bucketed.segment_batches()
+        assert (b, off, seg.E) == (0, 0, 8)
+
+
+class TestBucketedEquivalence:
+    """Forced fine ladder at N=16 ⇒ the dispatch genuinely crosses buckets,
+    and the result must still be bit-exact against the dense scan."""
+
+    def test_bucketed_matches_dense_scan_and_per_event(self):
+        per_event = _trainer("dsgd_aau", "per_event",
+                             sched_kw={"buckets": LADDER})
+        res_pe = per_event.run(max_events=40, eval_every=10)
+        dense = _trainer("dsgd_aau", "scan", block_size=7, batch_pool=48,
+                         sched_kw={"buckets": LADDER})
+        res_dense = dense.run(max_events=40, eval_every=10)
+        sparse = _trainer("dsgd_aau", "sparse_scan", block_size=7,
+                          batch_pool=48, sched_kw={"buckets": LADDER})
+        res_sparse = sparse.run(max_events=40, eval_every=10)
+
+        for other, res_other, tol in ((dense, res_dense, 0.0),
+                                      (per_event, res_pe, 1e-6)):
+            for name, a, b in (("W", other.W, sparse.W),
+                               ("S", other.S, sparse.S)):
+                for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                    np.testing.assert_allclose(
+                        np.asarray(la), np.asarray(lb), atol=tol,
+                        err_msg=f"{name} vs {other.mode}")
+            # push-sum weights and batch pointers must stay continuous
+            # across every bucket-boundary dispatch split
+            np.testing.assert_allclose(np.asarray(other.y),
+                                       np.asarray(sparse.y), atol=tol)
+            if other._ptr is not None:  # per_event keeps no batch pointers
+                np.testing.assert_array_equal(np.asarray(other._ptr),
+                                              np.asarray(sparse._ptr))
+            assert len(res_other.history) == len(res_sparse.history)
+            for p_o, p_s in zip(res_other.history, res_sparse.history):
+                assert p_s.k == p_o.k
+                assert p_s.time == pytest.approx(p_o.time)
+                assert p_s.loss == pytest.approx(p_o.loss, abs=1e-5)
+                assert p_s.comm_param_copies == p_o.comm_param_copies
+            assert res_sparse.total_events == res_other.total_events
+
+    def test_bucketed_warmup_leaves_state_unchanged(self):
+        tr = _trainer("dsgd_aau", "sparse_scan",
+                      sched_kw={"buckets": LADDER})
+        W0 = jax.tree.map(lambda x: np.asarray(x).copy(), tr.W)
+        tr.warmup()
+        for a, b in zip(jax.tree.leaves(W0), jax.tree.leaves(tr.W)):
+            np.testing.assert_array_equal(a, np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(tr._ptr), np.zeros(N))
+
+    def test_bucket_caps_shrink_quadratically(self):
+        cap = DecentralizedTrainer._bucket_cap
+        buckets = (16, 64, 256)
+        caps = [cap(buckets, b, 128) for b in range(3)]
+        assert caps == [32, 2, 1]       # quantum · (b0/A)², floored at 1
+        assert cap(buckets, 0, 8) == 8  # small targets bound the quantum
+
+    def test_donated_carry_survives_repeated_runs(self):
+        """same_init leaves S aliasing W; the sparse path must de-alias
+        before donating the carry, and repeated dispatches must never
+        reuse a donated buffer."""
+        tr = _trainer("dsgd_aau", "sparse_scan", block_size=5,
+                      batch_pool=48, sched_kw={"buckets": LADDER})
+        tr.warmup()
+        tr.run(max_events=25, eval_every=5)
+        # every leaf is live — a donated-and-reused buffer would raise here
+        for leaf in (jax.tree.leaves(tr.W) + jax.tree.leaves(tr.S)
+                     + [tr.y, tr._ptr]):
+            assert np.asarray(leaf).shape is not None
+        assert not any(w is s for w, s in zip(jax.tree.leaves(tr.W),
+                                              jax.tree.leaves(tr.S)))
+
+
+class TestScatterKernel:
+    def _case(self, n, d, A, pad, seed=0, worker0=False):
+        key = jax.random.PRNGKey(seed)
+        X = jax.random.normal(key, (n, d), jnp.float32)
+        rows = jax.random.normal(jax.random.fold_in(key, 1), (A, d),
+                                 jnp.float32)
+        rng = np.random.default_rng(seed)
+        w = np.full(A, -1, np.int32)
+        m = A - pad
+        pool = np.arange(1, n) if not worker0 else np.arange(n)
+        pick = rng.choice(pool, size=m - worker0, replace=False)
+        if worker0:
+            pick = np.concatenate([[0], pick])
+        w[:m] = np.sort(pick)
+        return X, rows, jnp.asarray(w)
+
+    @pytest.mark.parametrize("n,d,A,pad,worker0", [
+        (16, 256, 2, 0, False),    # AD-PSGD pair, no padding
+        (16, 256, 2, 1, False),    # isolated-worker event
+        (16, 256, 4, 2, True),     # worker 0 active *and* padded lanes:
+                                   # the row-0 writeback corner
+        (64, 512, 8, 3, False),
+        (256, 256, 16, 5, True),
+    ])
+    def test_matches_ref(self, n, d, A, pad, worker0):
+        X, rows, w = self._case(n, d, A, pad, seed=n + A, worker0=worker0)
+        out = scatter_rows_pallas(X, rows, w, block_d=256, interpret=True)
+        ref = sparse_scatter_rows_ref(X, rows, w)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_all_padded_lanes_is_identity(self):
+        X, rows, w = self._case(16, 256, 4, 0, seed=9)
+        out = scatter_rows_pallas(X, rows, jnp.full_like(w, -1),
+                                  block_d=256, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(X))
+
+    def test_op_pads_lanes_and_feature_dim(self):
+        """The ops wrapper handles A not a sublane multiple and D not a
+        block_d multiple (pad lanes carry -1, pad columns are cropped)."""
+        X, rows, w = self._case(16, 200, 3, 1, seed=4)
+        Xc = jnp.array(X)  # keep an undonated copy for the oracle
+        out = sparse_scatter_rows(X, rows, w, block_d=256)
+        ref = sparse_scatter_rows_ref(Xc, rows, w)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    def test_standalone_call_donates_the_carry(self):
+        X, rows, w = self._case(16, 256, 4, 1, seed=2)
+        X = jnp.array(X) + 0.0  # a buffer this test uniquely owns
+        out = sparse_scatter_rows(X, rows, w, block_d=256)
+        assert out.shape == (16, 256)
+        assert X.is_deleted()   # the O(N·D) carry copy is really gone
