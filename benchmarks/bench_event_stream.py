@@ -22,7 +22,21 @@ N=256 packed to the static bound sits under 4% lane fill).
 
 Event *generation* (host-side numpy) is timed separately: it bounds every
 consumer from above.  The opt-in event-horizon batcher is timed for the
-single-edge schedulers only (the others don't accept ``horizon=``).
+single-edge schedulers only (the others don't accept ``horizon=``; their
+rows carry an explicit ``gen_horizon_eps: "unsupported"`` marker).
+
+Two further columns record the device-resident streaming pipeline:
+
+- ``e2e_eps``: the sparse path at its *defaults* — array-native packed
+  generation plus the event-blocked scan (K conflict-free events merged
+  per ``lax.scan`` step) — timed generation+consumption together.
+  ``sparse_eps`` stays measured with ``native_generation=False,
+  events_per_step=1`` so it remains comparable with earlier recordings of
+  the one-event-per-step object path.
+- ``fused_eps``: ``mode="fused"`` for the single-edge schedulers — event
+  generation and consumption fused into one compiled scan, host work
+  reduced to two vectorized RNG draws per block (a different-but-
+  deterministic RNG-order realization; see core/fused.py).
 
   python -m benchmarks.bench_event_stream [--paper-scale] [--xl] [--smoke]
       # writes BENCH_event_stream.json
@@ -59,6 +73,9 @@ D_IN, D_H, BATCH = 16, 16, 4
 PER_EVENT_MAX_N = 64     # legacy interpreter is noise above this scale
 SCAN_MAX_N = 256         # dense O(n²·D) mix: wall-clock filler above this
 HORIZON_ALGS = ("ad_psgd", "agp")   # single-edge scheds accept horizon=
+FUSED_ALGS = ("ad_psgd",)           # single-edge member of ALGS (agp's
+                                    # fused path is the same code; its
+                                    # equivalence lives in the test suite)
 
 _JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_event_stream.json")
@@ -89,7 +106,7 @@ def _make_sched(alg: str, n: int, **kw):
 
 
 def _make_trainer(alg: str, mode: str, n: int, block_size: int,
-                  **sched_kw) -> DecentralizedTrainer:
+                  trainer_kw=None, **sched_kw) -> DecentralizedTrainer:
     data = ClassificationData(n_workers=n, d=D_IN, samples_per_worker=64,
                               seed=0)
     # warmup() builds the pool before run() can size it, so pass an explicit
@@ -97,7 +114,8 @@ def _make_trainer(alg: str, mode: str, n: int, block_size: int,
     # bounds used here (~81 at N=16); bigger pools measurably slow the
     # per-step gather on CPU, which would pollute the dispatch comparison.
     kw = ({"block_size": block_size, "batch_pool": 96}
-          if mode in ("scan", "sparse_scan") else {})
+          if mode in ("scan", "sparse_scan", "fused") else {})
+    kw.update(trainer_kw or {})
     return DecentralizedTrainer(
         _make_sched(alg, n, **sched_kw), _loss, _init,
         lambda w, s: data.batch(w, s, batch_size=BATCH),
@@ -105,8 +123,8 @@ def _make_trainer(alg: str, mode: str, n: int, block_size: int,
 
 
 def _events_per_sec(alg: str, mode: str, n: int, events: int,
-                    block_size: int, **sched_kw) -> float:
-    tr = _make_trainer(alg, mode, n, block_size, **sched_kw)
+                    block_size: int, trainer_kw=None, **sched_kw) -> float:
+    tr = _make_trainer(alg, mode, n, block_size, trainer_kw, **sched_kw)
     tr.warmup()
     t0 = time.perf_counter()
     res = tr.run(max_events=events, eval_every=10 ** 9)
@@ -145,10 +163,17 @@ def run(paper_scale: bool = False, smoke: bool = False, xl: bool = False):
         block = min(BLOCK_SIZE, events)
         gen = _generation_events_per_sec(alg, n, events)
         buckets, occupancy = _bucket_occupancy(alg, n, events)
-        sparse = _events_per_sec(alg, "sparse_scan", n, events, block)
+        # PR6-comparable configuration: object-path generation, one event
+        # per scan step — the pre-streaming sparse path.
+        sparse = _events_per_sec(
+            alg, "sparse_scan", n, events, block,
+            trainer_kw=dict(native_generation=False, events_per_step=1))
+        # The streaming defaults: native packed generation + event-blocked
+        # scan, generation and consumption timed together.
+        e2e = _events_per_sec(alg, "sparse_scan", n, events, block)
         row = {
             "n": n, "alg": alg, "events": events, "block_size": block,
-            "gen_eps": gen, "sparse_eps": sparse,
+            "gen_eps": gen, "sparse_eps": sparse, "e2e_eps": e2e,
             "buckets": buckets, "occupancy": occupancy,
         }
         yield csv_row(f"event_stream_gen_{alg}_n{n}", 1e6 / gen,
@@ -158,6 +183,15 @@ def run(paper_scale: bool = False, smoke: bool = False, xl: bool = False):
             row["gen_horizon_eps"] = gen_h
             yield csv_row(f"event_stream_gen_horizon_{alg}_n{n}",
                           1e6 / gen_h, f"{gen_h:.0f} events/s horizon gen")
+        else:
+            # multi-worker restart sets consume the RNG in event order —
+            # the horizon batcher's flat pre-draw doesn't apply
+            row["gen_horizon_eps"] = "unsupported"
+        if alg in FUSED_ALGS:
+            fused = _events_per_sec(alg, "fused", n, events, block)
+            row["fused_eps"] = fused
+            yield csv_row(f"event_stream_fused_{alg}_n{n}", 1e6 / fused,
+                          f"{fused:.0f} events/s fused gen+consume")
         if n <= PER_EVENT_MAX_N:
             per_event = _events_per_sec(alg, "per_event", n, events, block)
             row["per_event_eps"] = per_event
@@ -171,9 +205,12 @@ def run(paper_scale: bool = False, smoke: bool = False, xl: bool = False):
                           f"{scan:.0f} events/s")
         if len(buckets) > 1 and n <= SCAN_MAX_N:
             # the pre-ladder sparse path: every event padded to A=n.  Kept
-            # in the artifact so the bucketing win is a recorded number.
-            static = _events_per_sec(alg, "sparse_scan", n, events, block,
-                                     buckets=(n,))
+            # in the artifact so the bucketing win is a recorded number
+            # (measured at the same PR6-comparable settings as sparse_eps).
+            static = _events_per_sec(
+                alg, "sparse_scan", n, events, block,
+                trainer_kw=dict(native_generation=False, events_per_step=1),
+                buckets=(n,))
             row["sparse_static_eps"] = static
             row["bucket_speedup"] = sparse / static
             yield csv_row(
@@ -183,6 +220,9 @@ def run(paper_scale: bool = False, smoke: bool = False, xl: bool = False):
               if "sparse_speedup" in row else "")
         yield csv_row(f"event_stream_sparse_{alg}_n{n}", 1e6 / sparse,
                       f"{sparse:.0f} events/s{vs}")
+        yield csv_row(f"event_stream_e2e_{alg}_n{n}", 1e6 / e2e,
+                      f"{e2e:.0f} events/s streaming defaults "
+                      f"({e2e / sparse:.1f}x vs one-event-per-step)")
         results.append(row)
     payload = {
         "bench": "event_stream",

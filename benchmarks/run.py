@@ -45,7 +45,10 @@ def main() -> int:
 
     trace_root = None
     if args.profile:
-        trace_root = tempfile.mkdtemp(prefix="bench-trace-")
+        # repo-local (and git-ignored) so traces survive the run and are
+        # easy to find; one fresh subdir per invocation
+        os.makedirs("bench-traces", exist_ok=True)
+        trace_root = tempfile.mkdtemp(prefix="run-", dir="bench-traces")
 
     print("name,us_per_call,derived")
     failures = 0

@@ -314,82 +314,127 @@ def sparse_gossip_scan(
 
     workers_seq: (E, A) int32, ``-1``-padded (SparseEventBatch lanes);
     P_sub_seq: (E, A, A); grad_masks/restart_masks: (E, A) per-lane bools;
-    etas: (E,).  Padded lanes carry zero P_sub rows/columns, so they gather
+    etas: (E,) — one step size per event — or (E, A) per *lane* (merged
+    block-diagonal rows, :func:`~repro.core.scheduler.merge_event_groups`,
+    where one scan step replays K source events whose η-schedule positions
+    differ).  Padded lanes carry zero P_sub rows/columns, so they gather
     row 0 harmlessly, contribute no mass, and their scatter index is mapped
     out of bounds (dropped).  Returns the updated ``(W, S, y, ptr)``.
+    """
+    if etas.ndim == 1:
+        # broadcast to per-lane: the body's `eta * mask` product is then
+        # elementwise either way, and one trace serves both calling forms
+        etas = jnp.broadcast_to(etas[:, None], grad_masks.shape)
+
+    def body(carry, ev):
+        workers, P_sub, gm, rm, eta = ev
+
+        def step(c):
+            W, S, y, ptr = c
+            return sparse_event_update(W, S, y, ptr, pools, grad_fn,
+                                       workers, P_sub, gm, rm, eta,
+                                       use_kernel=use_kernel)
+
+        # Fixed-shape blocks arrive tail-padded with no-op rows (pad_to:
+        # every lane -1; real rows always carry lane 0 — packing is
+        # valid-first).  The whole gather-compute-scatter for a no-op row
+        # is the identity, so skip it: the O(A²·D) mix of a padded step
+        # would otherwise cost the same as a real event's, and short
+        # same-bucket segments are mostly padding.
+        return jax.lax.cond(workers[0] >= 0, step, lambda c: c, carry), None
+
+    carry, _ = jax.lax.scan(
+        body, (W, S, y, ptr),
+        (workers_seq, P_sub_seq, grad_masks, restart_masks, etas))
+    return carry
+
+
+def sparse_event_update(
+    W: Pytree,
+    S: Pytree,
+    y: jax.Array,
+    ptr: jax.Array,
+    pools: Pytree,
+    grad_fn: Callable,
+    workers: jax.Array,
+    P_sub: jax.Array,
+    gm: jax.Array,
+    rm: jax.Array,
+    eta: jax.Array,
+    use_kernel: bool = False,
+) -> Tuple[Pytree, Pytree, jax.Array, jax.Array]:
+    """One active-set event against the stacked carry — the single scan step
+    of :func:`sparse_gossip_scan`, factored out so the fused
+    generate-and-consume scan (core/fused.py) applies the *identical*
+    traced computation to events it materializes on device.
+
+    workers: (A,) int32 ``-1``-padded; P_sub: (A, A); gm/rm: (A,) bools;
+    eta: scalar or (A,) per-lane.  Returns the updated ``(W, S, y, ptr)``.
     """
     n = y.shape[0]
 
     def expand(mask, leaf):
         return mask.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(leaf.dtype)
 
-    def body(carry, ev):
-        W, S, y, ptr = carry
-        workers, P_sub, gm, rm, eta = ev
-        valid = workers >= 0
-        gidx = jnp.where(valid, workers, 0)      # clamped gather index
-        sidx = jnp.where(valid, workers, n)      # OOB ⇒ scatter drops the lane
-        # -- gather ------------------------------------------------------
-        Sa = jax.tree.map(lambda s: s[gidx], S)
-        ptra = ptr[gidx]
-        batches = select_pool_batch_at(pools, gidx, ptra)
-        grads = jax.vmap(grad_fn)(Sa, batches)   # A gradient lanes, not n
-        scaled = eta * (gm & valid).astype(jnp.float32)
-        # -- compute: P_subᵀ·(W_a − η·mask⊙G) ----------------------------
-        if use_kernel:
-            from repro.kernels.sparse_gossip import ops as sparse_ops
-            Wn = jax.tree.map(
-                lambda w, g: sparse_ops.sparse_gossip_rows(
-                    w, g, P_sub.astype(w.dtype), scaled.astype(w.dtype),
-                    gidx),
-                W, grads)
-        else:
-            vf = valid.astype(jnp.float32)
-            Pm = P_sub * vf[:, None] * vf[None, :]
+    valid = workers >= 0
+    gidx = jnp.where(valid, workers, 0)      # clamped gather index
+    sidx = jnp.where(valid, workers, n)      # OOB ⇒ scatter drops the lane
+    # -- gather ------------------------------------------------------
+    Sa = jax.tree.map(lambda s: s[gidx], S)
+    ptra = ptr[gidx]
+    batches = select_pool_batch_at(pools, gidx, ptra)
+    grads = jax.vmap(grad_fn)(Sa, batches)   # A gradient lanes, not n
+    scaled = eta * (gm & valid).astype(jnp.float32)
+    # -- compute: P_subᵀ·(W_a − η·mask⊙G) ----------------------------
+    if use_kernel:
+        from repro.kernels.sparse_gossip import ops as sparse_ops
+        Wn = jax.tree.map(
+            lambda w, g: sparse_ops.sparse_gossip_rows(
+                w, g, P_sub.astype(w.dtype), scaled.astype(w.dtype),
+                gidx),
+            W, grads)
+    else:
+        vf = valid.astype(jnp.float32)
+        Pm = P_sub * vf[:, None] * vf[None, :]
 
-            def mix(w, g):
-                Wa = w[gidx]
-                stepped = (Wa - expand(scaled, Wa) * g).reshape(
-                    Wa.shape[0], -1)
-                out = jnp.einsum("ad,ab->bd", stepped, Pm.astype(Wa.dtype),
-                                 precision=jax.lax.Precision.HIGHEST)
-                return out.reshape(Wa.shape)
+        def mix(w, g):
+            Wa = w[gidx]
+            stepped = (Wa - expand(scaled, Wa) * g).reshape(
+                Wa.shape[0], -1)
+            out = jnp.einsum("ad,ab->bd", stepped, Pm.astype(Wa.dtype),
+                             precision=jax.lax.Precision.HIGHEST)
+            return out.reshape(Wa.shape)
 
-            Wn = jax.tree.map(mix, W, grads)
-        ya = jnp.einsum("a,ab->b", y[gidx], P_sub.astype(y.dtype))
-        Sn = jax.tree.map(lambda s, w: jnp.where(expand(rm, w) > 0, w, s),
-                          Sa, Wn)
-        # -- scatter -----------------------------------------------------
-        if use_kernel:
-            # kernel scatter-into-carry: the (n, ...) parameter leaves are
-            # updated through input/output aliasing (only the A active
-            # windows are written) instead of XLA's fresh-buffer scatter;
-            # the O(n) vector leaves (y, ptr) stay on the cheap XLA path.
-            W = jax.tree.map(
-                lambda w, rows: sparse_ops.sparse_scatter_rows(
-                    w, rows.astype(w.dtype), workers),
-                W, Wn)
-            S = jax.tree.map(
-                lambda s, rows: sparse_ops.sparse_scatter_rows(
-                    s, rows.astype(s.dtype), workers),
-                S, Sn)
-        else:
-            W = jax.tree.map(
-                lambda w, rows: w.at[sidx].set(rows.astype(w.dtype),
-                                               mode="drop"),
-                W, Wn)
-            S = jax.tree.map(
-                lambda s, rows: s.at[sidx].set(rows.astype(s.dtype),
-                                               mode="drop"),
-                S, Sn)
-        y = y.at[sidx].set(ya.astype(y.dtype), mode="drop")
-        ptr = ptr.at[sidx].set(ptra + rm.astype(ptr.dtype), mode="drop")
-        return (W, S, y, ptr), None
-
-    carry, _ = jax.lax.scan(
-        body, (W, S, y, ptr),
-        (workers_seq, P_sub_seq, grad_masks, restart_masks, etas))
-    return carry
+        Wn = jax.tree.map(mix, W, grads)
+    ya = jnp.einsum("a,ab->b", y[gidx], P_sub.astype(y.dtype))
+    Sn = jax.tree.map(lambda s, w: jnp.where(expand(rm, w) > 0, w, s),
+                      Sa, Wn)
+    # -- scatter -----------------------------------------------------
+    if use_kernel:
+        # kernel scatter-into-carry: the (n, ...) parameter leaves are
+        # updated through input/output aliasing (only the A active
+        # windows are written) instead of XLA's fresh-buffer scatter;
+        # the O(n) vector leaves (y, ptr) stay on the cheap XLA path.
+        W = jax.tree.map(
+            lambda w, rows: sparse_ops.sparse_scatter_rows(
+                w, rows.astype(w.dtype), workers),
+            W, Wn)
+        S = jax.tree.map(
+            lambda s, rows: sparse_ops.sparse_scatter_rows(
+                s, rows.astype(s.dtype), workers),
+            S, Sn)
+    else:
+        W = jax.tree.map(
+            lambda w, rows: w.at[sidx].set(rows.astype(w.dtype),
+                                           mode="drop"),
+            W, Wn)
+        S = jax.tree.map(
+            lambda s, rows: s.at[sidx].set(rows.astype(s.dtype),
+                                           mode="drop"),
+            S, Sn)
+    y = y.at[sidx].set(ya.astype(y.dtype), mode="drop")
+    ptr = ptr.at[sidx].set(ptra + rm.astype(ptr.dtype), mode="drop")
+    return W, S, y, ptr
 
 
 def build_sparse_event_scan(loss_fn: Callable, use_kernel: bool = False):

@@ -37,7 +37,9 @@ from typing import Dict, Iterator, List, Optional, Set, Tuple
 
 import numpy as np
 
-from repro.core.scheduler import _EMPTY_EDGES, Scheduler, ScheduleEvent
+from repro.core.scheduler import (_EMPTY_EDGES, CliquePackedStream,
+                                  PackedEventStream, Scheduler, ScheduleEvent,
+                                  SparseEventBatch)
 from repro.scenarios.base import TimeModelSpec
 from repro.core.topology import Graph
 
@@ -58,6 +60,97 @@ _P_PUSH_SECOND = _frozen(np.array([[1.0, 0.0], [0.5, 0.5]]))
 _LANE_FIRST = _frozen(np.array([True, False]))
 _LANE_SECOND = _frozen(np.array([False, True]))
 _LANE_SELF = _frozen(np.ones(1, dtype=bool))
+
+
+class _PairPackedStream(PackedEventStream):
+    """Array-native exact pair stream (AD-PSGD/AGP fast generation path).
+
+    Replays :meth:`_SingleEdgeScheduler._events_exact` — same heap, same
+    per-event RNG consumption order (neighbor pick then next completion
+    draw), same lock arithmetic — but writes each event straight into the
+    chunk's :class:`SparseEventBatch` arrays: no ``ScheduleEvent`` object,
+    no payload tuple, no ``from_events`` re-scatter.  Bit-identical chunks
+    to ``packed_stream(native=False)``, pinned by
+    tests/test_fused_stream.py.
+    """
+
+    def __init__(self, scheduler: "_SingleEdgeScheduler"):
+        self.scheduler = scheduler
+        self.buckets = scheduler.active_buckets()      # always (2,)
+        self._ebound = scheduler.edge_bound()          # always 1
+        self._k = 0
+        self._lock_free_at = 0.0
+        heap: List[Tuple[float, int]] = []
+        for i, dt in enumerate(
+                scheduler.sampler.sample_batch(np.arange(scheduler.n))):
+            heapq.heappush(heap, (dt, i))
+        self._heap = heap
+        # shared pair payloads, pre-cast once to the packed dtypes
+        _, P1, l1, copies = scheduler._pair_payload(0, 1)
+        _, P2, l2, _ = scheduler._pair_payload(1, 0)
+        self._P1 = np.ascontiguousarray(P1, dtype=np.float32)
+        self._P2 = np.ascontiguousarray(P2, dtype=np.float32)
+        self._l1 = np.asarray(l1, dtype=bool)
+        self._l2 = np.asarray(l2, dtype=bool)
+        self._copies = int(copies)
+
+    def next_chunk(self, k: int):
+        sched = self.scheduler
+        sampler = sched.sampler
+        rng = sched._rng
+        nbrs_list = sched._nbrs
+        lock_dt = sched.lock_time
+        heap = self._heap
+        push, pop = heapq.heappush, heapq.heappop
+        lock_free_at = self._lock_free_at
+        P1, P2, l1, l2 = self._P1, self._P2, self._l1, self._l2
+        copies_pair = self._copies
+        a = CliquePackedStream._alloc(k, 2, self._ebound)
+        workers, P_sub = a["workers"], a["P_sub"]
+        gm, rm = a["grad_workers"], a["restart_workers"]
+        edges, n_edges = a["edges"], a["n_edges"]
+        times, n_workers = a["times"], a["n_workers"]
+        copies = a["param_copies_sent"]
+        for j in range(k):
+            t, i = pop(heap)
+            nbrs = nbrs_list[i]
+            m = len(nbrs)
+            if m:
+                if lock_dt:
+                    t = (t if t > lock_free_at else lock_free_at) + lock_dt
+                    lock_free_at = t
+                r = int(nbrs[rng.integers(0, m)])
+                if i < r:
+                    workers[j, 0] = i
+                    workers[j, 1] = r
+                    P_sub[j] = P1
+                    gm[j] = l1
+                    rm[j] = l1
+                    edges[j, 0, 0] = i
+                    edges[j, 0, 1] = r
+                else:
+                    workers[j, 0] = r
+                    workers[j, 1] = i
+                    P_sub[j] = P2
+                    gm[j] = l2
+                    rm[j] = l2
+                    edges[j, 0, 0] = r
+                    edges[j, 0, 1] = i
+                n_workers[j] = 2
+                n_edges[j] = 1
+                copies[j] = copies_pair
+            else:
+                workers[j, 0] = i
+                n_workers[j] = 1
+                P_sub[j, 0, 0] = 1.0
+                gm[j, 0] = True
+                rm[j, 0] = True
+            times[j] = t
+            push(heap, (t + sampler.sample(i), i))
+        self._lock_free_at = lock_free_at
+        batch = SparseEventBatch(k0=self._k, **a)
+        self._k += k
+        return batch
 
 
 class _SingleEdgeScheduler(Scheduler):
@@ -127,6 +220,69 @@ class _SingleEdgeScheduler(Scheduler):
         if self.horizon:
             return self._events_horizon(self.horizon)
         return self._events_exact()
+
+    def _native_packed_stream(self) -> Optional[PackedEventStream]:
+        # The native stream replays the *exact* per-event RNG order, so a
+        # horizon-batched scheduler (different draw order by construction)
+        # and the reorder-buffered mixed lock/no-lock graphs keep the
+        # object-path adapter.
+        if self.horizon or self._needs_sorted_emission():
+            return None
+        return _PairPackedStream(self)
+
+    # -- fused pure-JAX generation (core/fused.py) -------------------------
+    def fused_supported(self) -> bool:
+        """Whether the on-device fused generator can replay this stream.
+
+        Requires per-worker completion-time factors that are iid draws
+        (``TimeModel.iid_horizon``): the fused scan pre-draws a flat factor
+        stream and assigns factors to workers *by event order decided on
+        device*, which is only distribution-preserving when the factor law
+        doesn't depend on which worker consumes it.  Scenario samplers with
+        worker- or history-dependent factors (diurnal) are excluded.
+        """
+        return bool(getattr(self.sampler, "iid_horizon", False))
+
+    def fused_spec(self) -> Dict[str, object]:
+        """Static device constants for the fused generator's scan body."""
+        n = self.n
+        deg = np.fromiter((len(nb) for nb in self._nbrs),
+                          dtype=np.int32, count=n)
+        width = max(1, int(deg.max(initial=1)))
+        nbr_table = np.zeros((n, width), dtype=np.int32)
+        for i, nb in enumerate(self._nbrs):
+            if len(nb):
+                nbr_table[i, :len(nb)] = nb
+        _, P1, l1, copies = self._pair_payload(0, 1)
+        _, P2, l2, _ = self._pair_payload(1, 0)
+        return dict(
+            n=n, deg=deg, nbr_table=nbr_table,
+            base=np.asarray(self.sampler.base, dtype=np.float32),
+            lock_dt=float(self.lock_time),
+            P_first=np.asarray(P1, dtype=np.float32),
+            P_second=np.asarray(P2, dtype=np.float32),
+            lane_first=np.asarray(l1, dtype=bool),
+            lane_second=np.asarray(l2, dtype=bool),
+            copies_pair=int(copies),
+        )
+
+    def fused_draws(self, E: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Host RNG for one fused block: ``(factors, picks)``, both (E,) f32.
+
+        One ``sample_horizon`` + one uniform vector call per block — the
+        horizon batcher's draw order, so the fused stream is a
+        different-but-deterministic realization exactly like ``horizon=K``
+        (see the module docstring); determinism per (seed, block size) is
+        pinned by tests/test_fused_stream.py.
+        """
+        factors = np.asarray(self.sampler.sample_horizon(E), dtype=np.float32)
+        picks = self._rng.random(E).astype(np.float32)
+        return factors, picks
+
+    def fused_initial_times(self) -> np.ndarray:
+        """(n,) f32 first completion times (same draw as the heap init)."""
+        return np.asarray(self.sampler.sample_batch(np.arange(self.n)),
+                          dtype=np.float32)
 
     def _events_exact(self) -> Iterator[ScheduleEvent]:
         """The canonical stream: RNG draws happen per event, in event order,
@@ -289,7 +445,13 @@ class PragueScheduler(Scheduler):
     def active_bound(self) -> int:
         return self.group_size  # one group's members per event
 
-    def events(self) -> Iterator[ScheduleEvent]:
+    def _group_tuples(self) -> Iterator[tuple]:
+        """The Prague event process as packed-ready clique tuples.
+
+        Yields ``(t, workers, P_sub, edges, copies)`` per group all-reduce —
+        the single source of truth consumed both by :meth:`events` (object
+        wrapper) and by the array-native :class:`CliquePackedStream`.
+        """
         n = self.n
         heap: List[Tuple[float, int]] = []
         for i, dt in enumerate(self.sampler.sample_batch(np.arange(n))):
@@ -298,7 +460,6 @@ class PragueScheduler(Scheduler):
         groups: Dict[int, Set[int]] = {}       # group id -> members
         ready: Dict[int, Set[int]] = {}        # group id -> members finished
         next_gid = 0
-        k = 0
         while True:
             t, i = heapq.heappop(heap)
             if i not in in_group:
@@ -325,21 +486,29 @@ class PragueScheduler(Scheduler):
             # the group's partial all-reduce: a g×g block of 1/g, identity
             # outside — built at its true size, never as an (n, n) matrix
             iu, ju = np.triu_indices(g, k=1)
-            lanes = np.ones(g, dtype=bool)
-            yield ScheduleEvent(
-                k=k, time=t, n=n, workers=widx,
-                P_sub=np.full((g, g), 1.0 / g),
-                grad_lanes=lanes, restart_lanes=lanes,
-                edges=np.stack([widx[iu], widx[ju]], axis=1) if g > 1
-                else _EMPTY_EDGES,
-                # ring partial all-reduce: 2·(g−1)/g vector-copies per member
-                param_copies_sent=2 * (g - 1),
-            )
-            k += 1
+            yield (t, widx, np.full((g, g), 1.0 / g),
+                   np.stack([widx[iu], widx[ju]], axis=1) if g > 1
+                   else _EMPTY_EDGES,
+                   # ring partial all-reduce: 2·(g−1)/g vector-copies per member
+                   2 * (g - 1))
             for m, dt in zip(members, self.sampler.sample_batch(members)):
                 del in_group[m]
                 heapq.heappush(heap, (t + dt, m))
             del groups[gid], ready[gid]
+
+    def events(self) -> Iterator[ScheduleEvent]:
+        n = self.n
+        for k, (t, widx, P_sub, edges, copies) in \
+                enumerate(self._group_tuples()):
+            lanes = np.ones(len(widx), dtype=bool)
+            yield ScheduleEvent(
+                k=k, time=t, n=n, workers=widx, P_sub=P_sub,
+                grad_lanes=lanes, restart_lanes=lanes,
+                edges=edges, param_copies_sent=copies,
+            )
+
+    def _native_packed_stream(self) -> Optional[PackedEventStream]:
+        return CliquePackedStream(self, self._group_tuples())
 
 
 class AGPScheduler(_SingleEdgeScheduler):

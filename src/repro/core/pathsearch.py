@@ -69,6 +69,10 @@ class PathSearchState:
     def __post_init__(self):
         self._uf = _UnionFind(self.graph.n)
         self._nbr_cache = None
+        # component root per worker, mirroring _UnionFind.find: updated on
+        # every successful union (rare — ≤ n−1 per epoch), so the hot
+        # membership tests vectorize over it instead of chasing parents
+        self._roots = np.arange(self.graph.n, dtype=np.int32)
 
     # ------------------------------------------------------------------
     def novel_edges(self, finished: Set[int]) -> List[Edge]:
@@ -91,12 +95,11 @@ class PathSearchState:
         ai, bi = np.nonzero(sub)
         if not ai.size:
             return []
-        find = self._uf.find
-        roots = [find(w) for w in fin]
+        roots = self._roots[widx]
         return [(fin[a], fin[b]) for a, b in zip(ai.tolist(), bi.tolist())
                 if roots[a] != roots[b]]
 
-    def novel_edges_incident(self, i: int, finished: Set[int]) -> List[Edge]:
+    def novel_edges_incident(self, i: int, finished) -> List[Edge]:
         """Committable graph edges between the just-finished ``i`` and the
         rest of the finished set — the incremental form of
         :meth:`novel_edges`.  Between commits the component partition is
@@ -107,22 +110,36 @@ class PathSearchState:
         set for any order of the same edge set — only which spanning-tree
         edges get recorded in ``committed`` varies).  O(deg) per finish,
         which is what keeps DSGD-AAU event generation flat in n.
+
+        ``finished`` is either a set of worker ids or an (n,) bool mask —
+        the mask form lets the whole neighborhood filter vectorize.
         """
+        nb = self.graph.neighbor_lists[i]
+        if isinstance(finished, np.ndarray):
+            sel = nb[finished[nb] & (self._roots[nb] != self._roots[i])]
+            return [(i, j) if i < j else (j, i) for j in sel.tolist()]
         if self._nbr_cache is None:
             # plain-int view of the graph's cached neighbor arrays (python
             # ints hash/compare faster in the set-membership test below)
             self._nbr_cache = [a.tolist() for a in self.graph.neighbor_lists]
-        find = self._uf.find
-        ri = find(i)
+        ri = int(self._roots[i])
+        roots = self._roots
         out: List[Edge] = []
         for j in self._nbr_cache[i]:
-            if j in finished and find(j) != ri:
+            if j in finished and roots[j] != ri:
                 out.append((i, j) if i < j else (j, i))
         return out
 
     def commit(self, edges: List[Edge]) -> None:
         for i, j in edges:
-            if self._uf.union(i, j):
+            ra, rb = self._uf.find(i), self._uf.find(j)
+            if ra != rb:
+                self._uf.union(i, j)
+                # mirror the merge into the flat roots array: one of ra/rb
+                # survived as the combined component's root
+                rn = self._uf.find(i)
+                ro = rb if rn == ra else ra
+                self._roots[self._roots == ro] = rn
                 self.committed.add((min(i, j), max(i, j)))
                 self.vertices.update((i, j))
 
@@ -137,6 +154,7 @@ class PathSearchState:
         self.committed.clear()
         self.vertices.clear()
         self._uf = _UnionFind(self.graph.n)
+        self._roots[:] = np.arange(self.graph.n, dtype=np.int32)
         self.epochs_completed += 1
 
     # -- diagnostics ----------------------------------------------------

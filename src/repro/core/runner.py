@@ -59,8 +59,31 @@ import numpy as np
 from repro.core.aau import (build_event_scan, build_event_step,
                             build_sparse_event_scan, debiased_average)
 from repro.core.scheduler import (BucketedSparseEventBatch, EventBatch,
-                                  Scheduler, SparseEventBatch)
+                                  Scheduler, SparseEventBatch,
+                                  merge_event_groups)
 from repro.utils.tree import tree_size, tree_stack
+
+
+def choose_mode(n: int, buckets: Tuple[int, ...],
+                global_events: bool = False) -> str:
+    """``mode="auto"``'s dispatch decision: dense ``scan`` vs ``sparse_scan``.
+
+    The sparse path wins when gathering the ladder's typical A lanes beats
+    touching all n rows; at small n the dense scan's single fixed-shape
+    block both avoids the gather/scatter overhead and compiles once.  The
+    recorded BENCH_event_stream rows put the crossover consistently around
+    ``n ≈ 4·A`` for the narrowest rung (AD-PSGD at N=16 ran the sparse path
+    at 0.52× the dense scan; DSGD-AAU at N=64, whose first rung is 16, at
+    0.91×; both cross above 1 at the next measured scale), with a floor of
+    n=16 below which nothing beats the dense scan.  Barrier schedulers
+    (``global_events``) always take the dense scan — every event touches
+    all n workers, so sparse gathering is pure overhead.
+    """
+    if global_events:
+        return "scan"
+    if n <= max(16, 4 * buckets[0]):
+        return "scan"
+    return "sparse_scan"
 
 
 @dataclasses.dataclass
@@ -117,7 +140,8 @@ class DecentralizedTrainer:
         seed: int = 0,
         use_kernel: bool = False,
         same_init: bool = True,
-        mode: str = "scan",                 # "scan" | "sparse_scan" | "per_event"
+        mode: str = "scan",                 # "scan" | "sparse_scan" |
+                                            # "per_event" | "auto" | "fused"
         block_size: int = 32,               # events per compiled scan call
         batch_pool: Optional[int] = None,   # pre-drawn samples per worker
                                             # (scan mode; None = auto from the
@@ -126,14 +150,33 @@ class DecentralizedTrainer:
                                             # "float32" | "bfloat16" — applied
                                             # to stacked params, snapshots and
                                             # sample pools (float leaves only)
+        events_per_step: Optional[int] = None,
+                                            # sparse path: merge up to K
+                                            # conflict-free events per scan
+                                            # step (None = auto per bucket,
+                                            # ~64 lanes/step; 1 disables)
+        native_generation: bool = True,     # sparse path: schedulers with an
+                                            # array-native generator fill the
+                                            # packed chunks directly (bit-
+                                            # identical; False forces the
+                                            # per-event object adapter)
     ):
-        if mode not in ("scan", "sparse_scan", "per_event"):
+        if mode not in ("scan", "sparse_scan", "per_event", "auto", "fused"):
             raise ValueError(
-                "mode must be 'scan', 'sparse_scan' or 'per_event', "
-                f"got {mode!r}")
+                "mode must be 'scan', 'sparse_scan', 'per_event', 'auto' "
+                f"or 'fused', got {mode!r}")
         self.dtype = jnp.dtype(dtype)
         if not jnp.issubdtype(self.dtype, jnp.floating):
             raise ValueError(f"dtype policy must be a float dtype, got {dtype!r}")
+        if mode == "auto":
+            mode = choose_mode(scheduler.n, scheduler.active_buckets(),
+                               scheduler.global_events)
+        if mode == "fused" and not (hasattr(scheduler, "fused_spec")
+                                    and scheduler.fused_supported()):
+            raise ValueError(
+                "mode='fused' needs a single-edge scheduler (ad_psgd/agp) "
+                "whose time model has iid completion-time factors "
+                f"(TimeModel.iid_horizon); got {scheduler.name!r}")
         if mode == "sparse_scan" and scheduler.global_events:
             # Barrier streams (sync DSGD) touch all n workers every event:
             # the gather-compute-scatter path would gather everything anyway,
@@ -150,6 +193,8 @@ class DecentralizedTrainer:
         self.mode = mode
         self.block_size = max(1, block_size)
         self.batch_pool = batch_pool if batch_pool is None else max(1, batch_pool)
+        self.events_per_step = events_per_step
+        self.native_generation = native_generation
         rng = jax.random.PRNGKey(seed)
         if same_init:
             p0 = init_params_fn(rng)
@@ -172,6 +217,8 @@ class DecentralizedTrainer:
         self._draw_count = np.zeros(self.n, dtype=np.int64)
         self._scan = None           # block-compiled jitted update (dense)
         self._sparse = None         # block-compiled jitted update (active-set)
+        self._fused = None          # generate-and-consume block (fused mode)
+        self._fused_clock = None    # (times, lock_free) device event-process carry
         self._pools = None          # (n, batch_pool, ...) on-device sample pools
         self._ptr = None            # (n,) int32 restart counters
         self._eval_accum = None     # jitted eval → device-buffer accumulator
@@ -303,14 +350,27 @@ class DecentralizedTrainer:
         )
 
     def _dispatch_sparse_block(self, batch: SparseEventBatch, rounds: int,
-                               target: Optional[int] = None) -> None:
-        """One compiled call over active-set arrays: O(A·D) per event."""
+                               target: Optional[int] = None,
+                               lane_off: Optional[np.ndarray] = None) -> None:
+        """One compiled call over active-set arrays: O(A·D) per event.
+
+        ``lane_off`` marks ``batch`` as the output of ``merge_event_groups``:
+        a (E, A) int array of absolute source-event offsets per lane, from
+        which per-*lane* step sizes are built (each merged lane keeps the η
+        its source event would have used — the decay schedule is indexed by
+        event, not by scan step, so merging stays bit-exact).
+        """
         E = batch.E
         if target is None:
             target = self.block_size
         if E < target:
             batch = batch.pad_to(target)
-        etas = self._etas_for(batch.E, E, rounds)
+        if lane_off is None:
+            etas = self._etas_for(batch.E, E, rounds)
+        else:
+            etas = np.zeros((batch.E, batch.A))
+            etas[:E] = self.eta0 * self.eta_decay ** (
+                (rounds + lane_off) // self.eta_decay_every)
         self.W, self.S, self.y, self._ptr = self._sparse(
             self.W, self.S, self.y, self._ptr, self._pools,
             jnp.asarray(batch.workers),
@@ -319,6 +379,57 @@ class DecentralizedTrainer:
             jnp.asarray(batch.restart_workers),
             jnp.asarray(etas, dtype=jnp.float32),
         )
+
+    def _events_per_step(self, A: int) -> int:
+        """Events merged per scan step at lane width ``A`` (the blocking K).
+
+        The per-scan-step dispatch cost (~100 µs on this CPU backend,
+        measured in BENCH_event_stream) is independent of the step's lane
+        count, so folding a run of conflict-free events into one K·A-lane
+        step amortizes it group-size-fold.  K·A is a *lane budget* —
+        ``merge_event_groups`` packs members compactly, so low-fill streams
+        fit more than K events per step.  The auto policy targets ~64 lanes
+        per step — enough to amortize, small enough that one conflicting
+        event doesn't truncate groups often: A=2 pair events merge
+        16-deep, DSGD-AAU's typical A=16 rung packs ~10 of its ~5-worker
+        cliques per step, and A≥64 rungs stay unmerged (at budgets near n,
+        conflicts are certain and the padded lanes cost more than the
+        amortized thunk).
+        """
+        if self.events_per_step is not None:
+            return max(1, int(self.events_per_step))
+        return int(np.clip(64 // max(A, 1), 1, 16))
+
+    def _dispatch_sparse_chunk(self, batch: SparseEventBatch, rounds: int,
+                               cap: int) -> None:
+        """Advance the carry through one same-bucket packed chunk.
+
+        With K > 1 the chunk is first folded by ``merge_event_groups`` —
+        runs of ≤K consecutive events with pairwise-disjoint worker sets
+        become single block-diagonal scan steps — then chopped into
+        fixed-length ``cap // K`` dispatches (the merged path compiles its
+        own (E, K·A) block shape, distinct from the unmerged one).
+        """
+        K = self._events_per_step(batch.A)
+        if K <= 1:
+            start = 0
+            while start < batch.E:
+                stop = min(batch.E, start + cap)
+                self._dispatch_sparse_block(
+                    batch.slice(start, stop), rounds + start, cap)
+                start = stop
+            return
+        merged, lane_off = merge_event_groups(batch, K)
+        g_cap = max(1, cap // K)
+        start = 0
+        while start < merged.E:
+            stop = min(merged.E, start + g_cap)
+            # lane_off carries *absolute* source offsets within ``batch``,
+            # so ``rounds`` stays the chunk base across slices.
+            self._dispatch_sparse_block(
+                merged.slice(start, stop), rounds, g_cap,
+                lane_off=lane_off[start:stop])
+            start = stop
 
     # Base chunk length for the narrowest bucket of a multi-bucket ladder.
     # Chunks must be short: a DSGD-AAU stream switches buckets every ~4
@@ -366,12 +477,7 @@ class DecentralizedTrainer:
         """
         for b, off, seg in bucketed.segment_batches():
             cap = self._bucket_cap(bucketed.buckets, b, target)
-            start = 0
-            while start < seg.E:
-                stop = min(seg.E, start + cap)
-                self._dispatch_sparse_block(
-                    seg.slice(start, stop), rounds + off + start, cap)
-                start = stop
+            self._dispatch_sparse_chunk(seg, rounds + off, cap)
 
     def warmup(self) -> None:
         """Compile this trainer's update and eval with no-op dispatches.
@@ -386,26 +492,53 @@ class DecentralizedTrainer:
         needs more — pass ``batch_pool`` explicitly to pin both.
         """
         n = self.n
+        if self.mode == "fused":
+            self._ensure_fused()
+            # The block donates its carry: clone the state, advance the
+            # clones through one full-length block of zero-factor /
+            # zero-pick draws (η is traced data) and discard them.  No
+            # scheduler RNG is consumed, so the run's realization is
+            # untouched.
+            E = self.block_size
+            zeros = jnp.zeros((E,), dtype=jnp.float32)
+            carry, t_seq = self._fused(
+                jax.tree.map(jnp.array, self.W),
+                jax.tree.map(jnp.array, self.S),
+                jnp.array(self.y), jnp.array(self._ptr), self._pools,
+                jnp.ones((n,), dtype=jnp.float32), jnp.float32(0.0),
+                jnp.int32(0), zeros, zeros, zeros,
+            )
+            carry[2].block_until_ready()
+            self._warm_eval()
+            # Also warm the per-eval recording ops (row build + history
+            # scatter + buffer growth): they are tiny eager dispatches, but
+            # their first-call compiles sum to ~0.25 s — 30× a whole
+            # steady-state block at N=256.  Scratch buffer only; state and
+            # scheduler RNG are untouched.
+            buf = self._fused_record(
+                jnp.zeros((2, 4), dtype=jnp.float32), 0, t_seq[-1],
+                jnp.int32(0))
+            jnp.concatenate([buf, jnp.zeros_like(buf)]).block_until_ready()
+            return
         if self.mode == "sparse_scan":
             self._ensure_sparse()
             buckets = self.scheduler.active_buckets()
             ebound = self.scheduler.edge_bound()
             if len(buckets) > 1:
                 # one compiled block program per bucket, at the chunk cap
-                # its full segments will dispatch with
+                # (and merge width) its full segments will dispatch with
                 for b, A in enumerate(buckets):
                     cap = self._bucket_cap(buckets, b, self.block_size)
                     noop = SparseEventBatch.from_events(
                         [_identity_event(n)], active_bound=A,
-                        edge_bound=min(ebound, max(1, A * (A - 1) // 2))
-                    ).pad_to(cap)
-                    self._dispatch_sparse_block(noop, rounds=0, target=cap)
+                        edge_bound=min(ebound, max(1, A * (A - 1) // 2)))
+                    self._dispatch_sparse_chunk(noop, 0, cap)
             else:
                 noop = SparseEventBatch.from_events(
                     [_identity_event(n)],
                     active_bound=self.scheduler.active_bound(),
-                    edge_bound=ebound).pad_to(self.block_size)
-                self._dispatch_sparse_block(noop, rounds=0)
+                    edge_bound=ebound)
+                self._dispatch_sparse_chunk(noop, 0, self.block_size)
             self.y.block_until_ready()
             self._warm_eval()
             return
@@ -442,9 +575,12 @@ class DecentralizedTrainer:
         eval_every: int = 10,
     ) -> RunResult:
         assert max_events or max_time, "bound the run by events or virtual time"
-        if self.mode in ("scan", "sparse_scan"):
-            return self._run_scan(max_events, max_time, eval_every,
-                                  sparse=self.mode == "sparse_scan")
+        if self.mode == "fused":
+            return self._run_fused(max_events, max_time, eval_every)
+        if self.mode == "sparse_scan":
+            return self._run_sparse_stream(max_events, max_time, eval_every)
+        if self.mode == "scan":
+            return self._run_scan(max_events, max_time, eval_every)
         return self._run_per_event(max_events, max_time, eval_every)
 
     def _run_per_event(self, max_events, max_time, eval_every) -> RunResult:
@@ -482,14 +618,8 @@ class DecentralizedTrainer:
                 ))
         return self._finish(history, k, t, comm, rounds, active_sizes)
 
-    def _run_scan(self, max_events, max_time, eval_every,
-                  sparse: bool = False) -> RunResult:
-        if sparse:
-            self._ensure_sparse(max_events, max_time)
-            abound = self.scheduler.active_bound()
-            buckets = self.scheduler.active_buckets()
-        else:
-            self._ensure_scan(max_events, max_time)
+    def _run_scan(self, max_events, max_time, eval_every) -> RunResult:
+        self._ensure_scan(max_events, max_time)
         self._ensure_eval_accum()
         bound = self.scheduler.edge_bound()
         # With eval_every < block_size every chunk is exactly eval_every
@@ -531,34 +661,199 @@ class DecentralizedTrainer:
                 exhausted and buf)
             if not flush:
                 continue
-            if sparse and len(buckets) > 1:
-                self._dispatch_bucketed(
-                    BucketedSparseEventBatch.from_events(
-                        buf, buckets=buckets, edge_bound=bound),
-                    rounds, target)
-            elif sparse:
-                self._dispatch_sparse_block(
-                    SparseEventBatch.from_events(
-                        buf, active_bound=abound, edge_bound=bound),
-                    rounds, target)
-            else:
-                self._dispatch_block(
-                    EventBatch.from_events(buf, edge_bound=bound), rounds,
-                    target)
+            self._dispatch_block(
+                EventBatch.from_events(buf, edge_bound=bound), rounds,
+                target)
             rounds += len(buf)
             buf = []
             if rounds % eval_every == 0:
                 eval_buf = self._record_eval(eval_buf, len(meta))
                 meta.append((k, t, comm,
                              float(np.mean(active_sizes[-eval_every:]))))
-        if rounds and int(jnp.max(self._ptr)) > self._pool_len:
+        self._warn_pool_wrap(rounds)
+        return self._finish_scan(eval_buf, meta, k, t, comm, rounds,
+                                 active_sizes)
+
+    def _warn_pool_wrap(self, rounds: int) -> None:
+        # host-side max: keeps this off the compile cache (a jnp.max here
+        # would be the run's only reduce op — one more first-run compile)
+        if rounds and int(np.max(jax.device_get(self._ptr))) > self._pool_len:
             warnings.warn(
                 f"batch pool of {self._pool_len} draws/worker wrapped "
                 f"(max restarts {int(jnp.max(self._ptr))}): samples were "
                 "revisited cyclically; raise batch_pool (or bound the run "
                 "by max_events) for exact per-event sampling semantics.")
+
+    def _run_sparse_stream(self, max_events, max_time, eval_every) -> RunResult:
+        """The sparse path's driving loop, over *packed chunks*.
+
+        Replaces the object-event buffered loop for ``mode="sparse_scan"``:
+        the stream arrives ``next_chunk``-at-a-time already in
+        ``SparseEventBatch`` / ``BucketedSparseEventBatch`` array form
+        (array-natively generated where the scheduler supports it), and the
+        per-chunk metadata — virtual clocks, copy counts, active sizes —
+        is read from the packed arrays in vectorized form.  Event order,
+        eval-grid snapping and recorded history are identical to the
+        object path's (pinned by tests/test_sparse_event_stream.py).
+        """
+        self._ensure_sparse(max_events, max_time)
+        self._ensure_eval_accum()
+        target = min(self.block_size, eval_every)
+        cap = max(2, (max_events // eval_every + 2) if max_events else 16)
+        eval_buf = jnp.zeros((cap, 2), dtype=jnp.float32)
+        meta: List[Tuple[int, float, int, float]] = []  # (k, t, comm, a_mean)
+        comm = 0
+        active_sizes: List[int] = []
+        t = 0.0
+        k = -1
+        rounds = 0
+        stream = self.scheduler.packed_stream(native=self.native_generation)
+        exhausted = False
+        while not exhausted:
+            until_eval = eval_every - rounds % eval_every
+            want = min(target, until_eval)
+            if max_events is not None:
+                want = min(want, max_events - rounds)
+            if want <= 0:
+                break
+            chunk = stream.next_chunk(want)
+            if chunk is None:
+                break
+            if chunk.E < want:  # finite custom stream ended mid-chunk
+                exhausted = True
+            tms = chunk.stream_times()
+            if max_time is not None and tms[-1] > max_time:
+                exhausted = True
+                j = int(np.argmax(tms > max_time))
+                if j == 0:
+                    break
+                chunk = chunk.head(j)
+                tms = tms[:j]
+            comm += int(chunk.stream_copies().sum())
+            active_sizes.extend(chunk.stream_n_active().tolist())
+            t = float(tms[-1])
+            k = rounds + chunk.E - 1
+            if isinstance(chunk, BucketedSparseEventBatch):
+                self._dispatch_bucketed(chunk, rounds, target)
+            else:
+                self._dispatch_sparse_chunk(chunk, rounds, target)
+            rounds += chunk.E
+            if rounds % eval_every == 0:
+                eval_buf = self._record_eval(eval_buf, len(meta))
+                meta.append((k, t, comm,
+                             float(np.mean(active_sizes[-eval_every:]))))
+        self._warn_pool_wrap(rounds)
         return self._finish_scan(eval_buf, meta, k, t, comm, rounds,
                                  active_sizes)
+
+    # -- fused mode --------------------------------------------------------
+    def _ensure_fused(self, max_events: Optional[int] = None):
+        if self._fused is None:
+            from repro.core.fused import build_fused_pair_scan
+            self._fused = build_fused_pair_scan(
+                self.loss_fn, self.scheduler.fused_spec(),
+                use_kernel=self.use_kernel)
+            # Same aliasing hazard as _ensure_sparse: the fused block
+            # donates both W and S.
+            if any(w is s for w, s in zip(jax.tree.leaves(self.W),
+                                          jax.tree.leaves(self.S))):
+                self.S = jax.tree.map(jnp.array, self.S)
+        self._ensure_pools(max_events)
+
+    def _run_fused(self, max_events, max_time, eval_every) -> RunResult:
+        """Drive the generate-and-consume block (``mode="fused"``).
+
+        Per block the host's only work is two vectorized RNG draws; the
+        event process itself (who fires, when, with whom) lives in the
+        compiled scan's carry.  The virtual clock is device-resident too,
+        so runs are bounded by ``max_events`` only.
+        """
+        if not max_events:
+            raise ValueError(
+                "mode='fused' runs are bounded by max_events; max_time is "
+                "unsupported (the virtual clock lives on device — bounding "
+                "by it would force a host sync per block)")
+        if max_time is not None:
+            raise ValueError("mode='fused' does not support max_time")
+        sched = self.scheduler
+        self._ensure_fused(max_events)
+        self._ensure_eval_accum()
+        copies_pair = int(sched.fused_spec()["copies_pair"])
+        if self._fused_clock is None:
+            self._fused_clock = (
+                jnp.asarray(sched.fused_initial_times(), dtype=jnp.float32),
+                jnp.float32(0.0))
+        times, lock_free = self._fused_clock
+        comm_dev = jnp.int32(0)
+        blk = max(1, min(self.block_size, eval_every, max_events))
+        # Eval rows carry [loss, metric, t_last, comm] — the virtual clock
+        # and the copy counter stay on device; everything is fetched once
+        # at the end.  The buffer starts at the same fixed shape warmup()
+        # precompiled the record scatter for, and doubles on demand
+        # (log₂(evals) growth compiles on the first run, none after).
+        eval_buf = jnp.zeros((2, 4), dtype=jnp.float32)
+        meta: List[Tuple[int, int]] = []  # (k, rounds_at_eval)
+        rounds = 0
+        while rounds < max_events:
+            until_eval = eval_every - rounds % eval_every
+            E = min(blk, until_eval, max_events - rounds)
+            factors, picks = sched.fused_draws(E)
+            # f32 cast on host: jnp.asarray of an f64 array would insert a
+            # convert_element_type op (a first-run compile); a same-dtype
+            # asarray is a pure device put
+            etas = np.asarray(self._etas_for(E, E, rounds), dtype=np.float32)
+            (self.W, self.S, self.y, self._ptr, times, lock_free,
+             comm_dev), t_seq = self._fused(
+                self.W, self.S, self.y, self._ptr, self._pools,
+                times, lock_free, comm_dev,
+                jnp.asarray(factors, dtype=jnp.float32),
+                jnp.asarray(picks, dtype=jnp.float32),
+                jnp.asarray(etas, dtype=jnp.float32))
+            rounds += E
+            if rounds % eval_every == 0 or rounds >= max_events:
+                eval_buf = self._fused_record(
+                    eval_buf, len(meta), t_seq[-1], comm_dev)
+                meta.append((rounds - 1, rounds))
+        self._fused_clock = (times, lock_free)
+        self._warn_pool_wrap(rounds)
+        # one fetch; sliced on host (a device-side [:k] would compile a
+        # slice executable on the first run)
+        vals = np.asarray(jax.device_get(eval_buf))[:len(meta)]
+        # comm is exact through f32 up to 2^24 copies; pair-event counts
+        # (comm deltas / copies-per-pair) back out the mean active-set
+        # size — 2 lanes per pair event, 1 per isolated-worker event.
+        history = []
+        prev_comm = 0
+        prev_rounds = 0
+        for i, (mk, mr) in enumerate(meta):
+            loss, metric, tt, commf = (float(v) for v in vals[i])
+            comm_i = int(round(commf))
+            E_i = mr - prev_rounds
+            pairs = ((comm_i - prev_comm) // copies_pair
+                     if copies_pair else E_i)
+            history.append(HistoryPoint(
+                k=mk, time=tt, loss=loss, metric=metric,
+                comm_param_copies=comm_i,
+                n_active_mean=(E_i + min(pairs, E_i)) / max(E_i, 1)))
+            prev_comm, prev_rounds = comm_i, mr
+        return RunResult(
+            algorithm=sched.name, history=history,
+            final_loss=history[-1].loss, final_metric=history[-1].metric,
+            total_events=rounds, total_time=history[-1].time,
+            total_comm_copies=history[-1].comm_param_copies,
+            param_count=self.param_count,
+        )
+
+    def _fused_record(self, eval_buf: jax.Array, i: int, t_last: jax.Array,
+                      comm_dev: jax.Array) -> jax.Array:
+        """Append one fused-mode history row ([loss, metric, t, comm]) —
+        all eager device ops, no host sync; warmup() precompiles them."""
+        row = jnp.concatenate([
+            self._eval_accum(self.W, self.y, self.eval_batch),
+            jnp.stack([t_last, comm_dev.astype(jnp.float32)])])
+        if i == eval_buf.shape[0]:
+            eval_buf = jnp.concatenate([eval_buf, jnp.zeros_like(eval_buf)])
+        return eval_buf.at[jnp.asarray(i)].set(row)
 
     # -- on-device eval history -------------------------------------------
     def _ensure_eval_accum(self):

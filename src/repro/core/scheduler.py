@@ -513,6 +513,27 @@ class SparseEventBatch:
             n_edges=self.n_edges[start:stop],
         )
 
+    def head(self, j: int) -> "SparseEventBatch":
+        """The first ``j`` events (no-op when ``j >= E``).
+
+        The packed-stream consumer truncates a chunk here when ``max_time``
+        lands inside it — the array analogue of the per-event loop's
+        ``ev.time > max_time`` break.
+        """
+        if j >= self.E:
+            return self
+        return self.slice(0, j)
+
+    # -- stream-order metadata (uniform with BucketedSparseEventBatch) ----
+    def stream_times(self) -> np.ndarray:
+        return self.times
+
+    def stream_copies(self) -> np.ndarray:
+        return self.param_copies_sent
+
+    def stream_n_active(self) -> np.ndarray:
+        return self.n_active
+
     def to_events(self, n: int) -> List[ScheduleEvent]:
         """Reconstruct per-event form (round-trip/diagnostic helper).
 
@@ -534,6 +555,98 @@ class SparseEventBatch:
                 param_copies_sent=int(self.param_copies_sent[e]),
             ))
         return out
+
+
+def merge_event_groups(batch: SparseEventBatch,
+                       K: int) -> Tuple[SparseEventBatch, np.ndarray]:
+    """Merge runs of conflict-free events into compact K·A-lane rows.
+
+    The packing half of the event-blocked scan (PR 6 measured ~100 µs of
+    per-``lax.scan``-step thunk overhead *independent of N* — the dominant
+    sparse-path cost for narrow lanes): consecutive events whose active
+    sets are pairwise disjoint commute as state updates (each touches only
+    its own ``(W, S, y, ptr)`` rows and gathers only rows the others never
+    write), so a run of them is replayed *exactly* by one K·A-lane "event"
+    whose ``P_sub`` is the block-diagonal stack of the members' submatrices
+    and whose lanes are their concatenation.  The existing
+    ``sparse_gossip_scan`` body consumes the merged row unchanged — the
+    gather, the masked einsum (zero cross-blocks contribute exact zeros in
+    order, so partial sums are bit-identical), and the unique-index scatter
+    are all oblivious to the grouping — which amortizes the thunk overhead
+    group-size-fold while keeping the replay bit-exact against the
+    per-event dispatch.
+
+    Packing is *compact*: each member contributes only its ``n_workers``
+    valid lanes (its pad lanes are dropped), so a group holds as many
+    events as fit in the K·A lane budget — for low-fill streams (DSGD-AAU
+    rungs pack ~30% of their lanes) that is ~3× more events per scan step
+    than block-slot placement at the same per-step lane cost.  Grouping is
+    greedy in stream order and breaks at the first conflict or full budget,
+    so order of application never matters within a group.  Returns the
+    merged batch of lane width ``K·A`` plus ``lane_off``: (G, K·A) int32
+    mapping every merged lane to its source event's offset within ``batch``
+    (for per-lane η decay); pad lanes map to offset 0 — their masks are
+    False, so their η is never applied.
+
+    Merged rows are an *execution* form only: lanes are not globally
+    sorted and ``times``/``k0`` keep whole-group granularity (``times`` =
+    last member's clock, ``param_copies_sent`` = the group's sum) —
+    round-trip via ``to_events`` is not supported.
+    """
+    E, A = batch.E, batch.A
+    if K <= 1:
+        off = np.broadcast_to(np.arange(E, dtype=np.int32)[:, None], (E, A))
+        return batch, off
+    AK = A * K
+    groups: List[Tuple[int, int]] = []      # (start, count)
+    start, count, lanes = 0, 0, 0
+    used: set = set()
+    for e in range(E):
+        m = int(batch.n_workers[e])
+        ws = batch.workers[e, :m].tolist()
+        if count and (lanes + m > AK or not used.isdisjoint(ws)):
+            groups.append((start, count))
+            start, count, lanes = e, 0, 0
+            used.clear()
+        used.update(ws)
+        count += 1
+        lanes += m
+    groups.append((start, count))
+    G = len(groups)
+    ew_m = max(1, int(max(batch.n_edges[s:s + c].sum()
+                          for s, c in groups)))
+    workers = np.full((G, AK), -1, dtype=np.int32)
+    P_sub = np.zeros((G, AK, AK), dtype=np.float32)
+    gm = np.zeros((G, AK), dtype=bool)
+    rm = np.zeros((G, AK), dtype=bool)
+    lane_off = np.zeros((G, AK), dtype=np.int32)
+    edges = np.full((G, ew_m, 2), -1, dtype=np.int32)
+    n_edges = np.zeros(G, dtype=np.int32)
+    times = np.empty(G, dtype=np.float64)
+    copies = np.zeros(G, dtype=np.int64)
+    for gi, (s, c) in enumerate(groups):
+        o = 0
+        for j in range(c):
+            m = int(batch.n_workers[s + j])
+            workers[gi, o:o + m] = batch.workers[s + j, :m]
+            P_sub[gi, o:o + m, o:o + m] = batch.P_sub[s + j, :m, :m]
+            gm[gi, o:o + m] = batch.grad_workers[s + j, :m]
+            rm[gi, o:o + m] = batch.restart_workers[s + j, :m]
+            lane_off[gi, o:o + m] = s + j
+            o += m
+            ne = int(batch.n_edges[s + j])
+            if ne:
+                e0 = int(n_edges[gi])
+                edges[gi, e0:e0 + ne] = batch.edges[s + j, :ne]
+                n_edges[gi] += ne
+        times[gi] = batch.times[s + c - 1]
+        copies[gi] = int(batch.param_copies_sent[s:s + c].sum())
+    merged = SparseEventBatch(
+        k0=batch.k0, times=times, workers=workers,
+        n_workers=(workers >= 0).sum(axis=1).astype(np.int32),
+        P_sub=P_sub, grad_workers=gm, restart_workers=rm,
+        param_copies_sent=copies, edges=edges, n_edges=n_edges)
+    return merged, lane_off
 
 
 def geometric_buckets(n: int, base: int = 16, ratio: int = 4) -> Tuple[int, ...]:
@@ -657,6 +770,51 @@ class BucketedSparseEventBatch:
             p0 = int(self.positions[start])
             yield b, start, self.batches[b].slice(p0, p0 + (stop - start))
 
+    def head(self, j: int) -> "BucketedSparseEventBatch":
+        """The first ``j`` stream positions (no-op when ``j >= E``).
+
+        Each bucket keeps exactly its events among the first ``j`` — stream
+        order is preserved within buckets, so that is a prefix of every
+        bucket's packed rows.  Used by the packed-stream consumer to
+        truncate a chunk at a ``max_time`` crossing.
+        """
+        if j >= self.E:
+            return self
+        eb = self.event_bucket[:j]
+        counts = np.bincount(eb, minlength=len(self.buckets))
+        batches = tuple(
+            batch.slice(0, int(c)) if (batch is not None and c) else None
+            for batch, c in zip(self.batches, counts))
+        return dataclasses.replace(self, batches=batches, event_bucket=eb,
+                                   positions=self.positions[:j])
+
+    def _stream_gather(self, field: str, dtype) -> np.ndarray:
+        out = np.zeros(self.E, dtype=dtype)
+        for b, batch in enumerate(self.batches):
+            if batch is None:
+                continue
+            mask = self.event_bucket == b
+            out[mask] = getattr(batch, field)[self.positions[mask]]
+        return out
+
+    def stream_times(self) -> np.ndarray:
+        """Per-event virtual clocks in stream order."""
+        return self._stream_gather("times", np.float64)
+
+    def stream_copies(self) -> np.ndarray:
+        """Per-event parameter copies sent, in stream order."""
+        return self._stream_gather("param_copies_sent", np.int64)
+
+    def stream_n_active(self) -> np.ndarray:
+        """Per-event active-gradient counts, in stream order."""
+        out = np.zeros(self.E, dtype=np.int64)
+        for b, batch in enumerate(self.batches):
+            if batch is None:
+                continue
+            mask = self.event_bucket == b
+            out[mask] = batch.n_active[self.positions[mask]]
+        return out
+
     def to_events(self, n: int) -> List[ScheduleEvent]:
         """Reconstruct the stream-ordered per-event form."""
         unpacked = [batch.to_events(n) if batch is not None else []
@@ -686,6 +844,142 @@ class BucketedSparseEventBatch:
             out.append({"A": int(self.buckets[b]), "events": int(batch.E),
                         "lane_fill": fill})
         return out
+
+
+class PackedEventStream:
+    """Pull-based packed-chunk view of a scheduler's event stream.
+
+    The consumption protocol of the runner's sparse path: ``next_chunk(k)``
+    returns the next ``k`` events already packed — a
+    :class:`SparseEventBatch` for single-rung schedulers, a
+    :class:`BucketedSparseEventBatch` for multi-rung ladders — or a shorter
+    final chunk / ``None`` when a finite stream ends.  This base adapter
+    wraps any scheduler's ``events()`` iterator and packs with the
+    ``from_events`` classmethods, so every scheduler conforms; schedulers
+    with a *native* generator (``Scheduler._native_packed_stream``) fill the
+    packed arrays directly inside their event loop and skip the per-event
+    ``ScheduleEvent`` objects entirely.
+    """
+
+    def __init__(self, scheduler: "Scheduler"):
+        self.scheduler = scheduler
+        self.buckets = scheduler.active_buckets()
+        self._ebound = scheduler.edge_bound()
+        self._iter = scheduler.events()
+
+    @property
+    def bucketed(self) -> bool:
+        return len(self.buckets) > 1
+
+    def next_chunk(self, k: int):
+        buf = []
+        for ev in self._iter:
+            buf.append(ev)
+            if len(buf) == k:
+                break
+        if not buf:
+            return None
+        if self.bucketed:
+            return BucketedSparseEventBatch.from_events(
+                buf, buckets=self.buckets, edge_bound=self._ebound)
+        return SparseEventBatch.from_events(
+            buf, active_bound=self.buckets[-1], edge_bound=self._ebound)
+
+
+class CliquePackedStream(PackedEventStream):
+    """Array-native packing for clique-event schedulers (AAU/Prague/sync).
+
+    Consumes a *tuple* generator — ``(t, workers, P_sub, edges, copies)``
+    per event, every lane grad+restart active (the shape all clique
+    schedulers share) — and fills the packed chunk arrays directly: the
+    per-event ``ScheduleEvent`` object, its lane masks, and the
+    ``from_events`` re-scatter all disappear from the generation hot loop.
+    The produced chunks are bit-identical to the object path's (same float
+    casts, same ``k0``/edge-width conventions), which the round-trip tests
+    pin.
+    """
+
+    def __init__(self, scheduler: "Scheduler", tuples: Iterator[tuple]):
+        self.scheduler = scheduler
+        self.buckets = scheduler.active_buckets()
+        self._ebound = scheduler.edge_bound()
+        self._tuples = tuples
+        self._k = 0
+
+    def next_chunk(self, k: int):
+        buf = []
+        for tup in self._tuples:
+            buf.append(tup)
+            if len(buf) == k:
+                break
+        if not buf:
+            return None
+        chunk = (self._pack_bucketed(buf) if self.bucketed
+                 else self._pack_flat(buf))
+        self._k += len(buf)
+        return chunk
+
+    @staticmethod
+    def _alloc(E: int, A: int, ew: int):
+        return dict(
+            workers=np.full((E, A), -1, dtype=np.int32),
+            n_workers=np.zeros(E, dtype=np.int32),
+            P_sub=np.zeros((E, A, A), dtype=np.float32),
+            grad_workers=np.zeros((E, A), dtype=bool),
+            restart_workers=np.zeros((E, A), dtype=bool),
+            edges=np.full((E, ew, 2), -1, dtype=np.int32),
+            n_edges=np.zeros(E, dtype=np.int32),
+            times=np.empty(E, dtype=np.float64),
+            param_copies_sent=np.zeros(E, dtype=np.int64),
+        )
+
+    @staticmethod
+    def _fill(a: dict, row: int, t, widx, P_sub, edges, copies) -> None:
+        m = len(widx)
+        a["workers"][row, :m] = widx
+        a["n_workers"][row] = m
+        a["P_sub"][row, :m, :m] = P_sub
+        a["grad_workers"][row, :m] = True
+        a["restart_workers"][row, :m] = True
+        e = len(edges)
+        if e:
+            a["edges"][row, :e] = edges
+        a["n_edges"][row] = e
+        a["times"][row] = t
+        a["param_copies_sent"][row] = copies
+
+    def _pack_flat(self, buf) -> SparseEventBatch:
+        a = self._alloc(len(buf), self.buckets[-1], self._ebound)
+        for row, tup in enumerate(buf):
+            self._fill(a, row, *tup)
+        return SparseEventBatch(k0=self._k, **a)
+
+    def _pack_bucketed(self, buf) -> BucketedSparseEventBatch:
+        buckets = self.buckets
+        E = len(buf)
+        eb = np.empty(E, dtype=np.int32)
+        pos = np.empty(E, dtype=np.int32)
+        counts = [0] * len(buckets)
+        for j, tup in enumerate(buf):
+            b = bucket_index(buckets, len(tup[1]))
+            eb[j] = b
+            pos[j] = counts[b]
+            counts[b] += 1
+        allocs = [
+            self._alloc(c, A, min(self._ebound, max(1, A * (A - 1) // 2)))
+            if c else None for c, A in zip(counts, buckets)]
+        k0s = [None] * len(buckets)
+        for j, tup in enumerate(buf):
+            b = int(eb[j])
+            if k0s[b] is None:
+                k0s[b] = self._k + j
+            self._fill(allocs[b], int(pos[j]), *tup)
+        batches = tuple(
+            SparseEventBatch(k0=k0s[b], **a) if a is not None else None
+            for b, a in enumerate(allocs))
+        return BucketedSparseEventBatch(k0=self._k, buckets=buckets,
+                                        batches=batches, event_bucket=eb,
+                                        positions=pos)
 
 
 class Scheduler:
@@ -749,6 +1043,32 @@ class Scheduler:
         """
         return (self.active_bound(),)
 
+    def _native_packed_stream(self) -> Optional[PackedEventStream]:
+        """Native packed-generation fast path, or None to use the adapter.
+
+        Subclasses with a generator that fills ``SparseEventBatch`` /
+        ``BucketedSparseEventBatch`` arrays directly (no intermediate
+        ``ScheduleEvent`` objects) return their stream here.  The packed
+        arrays must be *bit-identical* to the adapter path's — same RNG
+        consumption order, same float casts — which
+        tests/test_fused_stream.py pins chunk-by-chunk for every scheduler.
+        """
+        return None
+
+    def packed_stream(self, native: bool = True) -> PackedEventStream:
+        """The event stream in packed-chunk (``next_chunk``) form.
+
+        ``native=True`` (default) uses the scheduler's array-native
+        generator when it has one; ``native=False`` forces the
+        object-path adapter (equivalence tests, custom ``events()``
+        overrides).
+        """
+        if native:
+            stream = self._native_packed_stream()
+            if stream is not None:
+                return stream
+        return PackedEventStream(self)
+
     def event_batches(self, block_size: int) -> Iterator[EventBatch]:
         """Pack consecutive events into EventBatches of ``block_size``.
 
@@ -767,10 +1087,27 @@ class Scheduler:
         if buf:
             yield EventBatch.from_events(buf, edge_bound=bound)
 
-    def sparse_event_batches(self, block_size: int) -> Iterator[SparseEventBatch]:
-        """Pack consecutive events into active-set SparseEventBatches."""
+    def sparse_event_batches(self, block_size: int,
+                             native: bool = True) -> Iterator[SparseEventBatch]:
+        """Pack consecutive events into active-set SparseEventBatches.
+
+        With ``native=True`` (default) single-rung schedulers that carry an
+        array-native generator fill the packed arrays directly — no
+        per-event ``ScheduleEvent`` objects — producing bit-identical
+        batches to the object path (``native=False``).
+        """
         if block_size < 1:
             raise ValueError("block_size must be >= 1")
+        if native and len(self.active_buckets()) == 1:
+            stream = self._native_packed_stream()
+            if stream is not None and not stream.bucketed:
+                while True:
+                    chunk = stream.next_chunk(block_size)
+                    if chunk is None:
+                        return
+                    yield chunk
+                    if chunk.E < block_size:
+                        return
         abound = self.active_bound()
         ebound = self.edge_bound()
         buf: List[ScheduleEvent] = []
@@ -785,10 +1122,25 @@ class Scheduler:
                 buf, active_bound=abound, edge_bound=ebound)
 
     def bucketed_sparse_event_batches(
-            self, block_size: int) -> Iterator[BucketedSparseEventBatch]:
-        """Pack consecutive events into bucketed lane-width batches."""
+            self, block_size: int,
+            native: bool = True) -> Iterator[BucketedSparseEventBatch]:
+        """Pack consecutive events into bucketed lane-width batches.
+
+        ``native=True`` (default) takes the scheduler's array-native
+        generator when it produces bucketed chunks (multi-rung ladders).
+        """
         if block_size < 1:
             raise ValueError("block_size must be >= 1")
+        if native and len(self.active_buckets()) > 1:
+            stream = self._native_packed_stream()
+            if stream is not None and stream.bucketed:
+                while True:
+                    chunk = stream.next_chunk(block_size)
+                    if chunk is None:
+                        return
+                    yield chunk
+                    if chunk.E < block_size:
+                        return
         buckets = self.active_buckets()
         ebound = self.edge_bound()
         buf: List[ScheduleEvent] = []
@@ -851,7 +1203,15 @@ class AAUScheduler(Scheduler):
         return self._buckets if self._buckets is not None \
             else geometric_buckets(self.n)
 
-    def events(self) -> Iterator[ScheduleEvent]:
+    def _clique_tuples(self) -> Iterator[tuple]:
+        """The AAU event process as packed-ready tuples.
+
+        Single source of truth for the simulation loop: yields
+        ``(t, workers, P_sub, edges, copies)`` per event; :meth:`events`
+        wraps each into a :class:`ScheduleEvent` for the legacy paths and
+        :meth:`_native_packed_stream` feeds them straight into
+        :class:`CliquePackedStream` array fills.
+        """
         n = self.n
         adj = self.graph.adj
         ps = PathSearchState(self.graph)
@@ -859,11 +1219,10 @@ class AAUScheduler(Scheduler):
         heap: List[Tuple[float, int]] = []
         for i, dt in enumerate(sample_batch(np.arange(n))):
             heapq.heappush(heap, (dt, i))
-        finished: set = set()
-        k = 0
+        finished = np.zeros(n, dtype=bool)
         while True:
             t, i = heapq.heappop(heap)
-            finished.add(i)
+            finished[i] = True
             if n > 1:
                 # One O(deg) neighborhood scan per worker finish instead of
                 # an O(|finished|²) rescan: between commits the component
@@ -878,27 +1237,36 @@ class AAUScheduler(Scheduler):
             # All finished workers exchange with their finished graph-neighbors:
             # the event is the finished clique's Metropolis mixing, built as an
             # m×m submatrix — the dense (n, n) matrix never exists here.
-            fin = sorted(finished)
-            widx = np.asarray(fin, dtype=np.int32)
+            fin = np.flatnonzero(finished)
+            widx = fin.astype(np.int32)
             sub_adj = adj[np.ix_(widx, widx)]
             er, ec = np.nonzero(np.triu(sub_adj, k=1))
             edges = np.stack([widx[er], widx[ec]], axis=1) if er.size \
                 else _EMPTY_EDGES
-            lanes = np.ones(len(fin), dtype=bool)
-            yield ScheduleEvent(
-                k=k, time=t, n=n, workers=widx,
-                P_sub=metropolis_submatrix(n, widx, sub_adj),
-                grad_lanes=lanes, restart_lanes=lanes,
-                edges=edges, param_copies_sent=2 * len(edges),
-            )
-            k += 1
+            yield (t, widx, metropolis_submatrix(n, widx, sub_adj),
+                   edges, 2 * len(edges))
             # batch-draw the restarted workers' next completion times: one
             # vectorized RNG call instead of one heap-push-sized draw each
-            for j, dt in zip(fin, sample_batch(fin)):
+            fl = fin.tolist()
+            for j, dt in zip(fl, sample_batch(fl)):
                 heapq.heappush(heap, (t + dt, j))
-            finished.clear()
+            finished[:] = False
             if n > 1 and ps.epoch_complete():
                 ps.reset_epoch()
+
+    def events(self) -> Iterator[ScheduleEvent]:
+        n = self.n
+        for k, (t, widx, P_sub, edges, copies) in \
+                enumerate(self._clique_tuples()):
+            lanes = np.ones(len(widx), dtype=bool)
+            yield ScheduleEvent(
+                k=k, time=t, n=n, workers=widx, P_sub=P_sub,
+                grad_lanes=lanes, restart_lanes=lanes,
+                edges=edges, param_copies_sent=copies,
+            )
+
+    def _native_packed_stream(self) -> Optional[PackedEventStream]:
+        return CliquePackedStream(self, self._clique_tuples())
 
     # expose for diagnostics
     def make_pathsearch(self) -> PathSearchState:
@@ -936,3 +1304,22 @@ class SyncScheduler(Scheduler):
                 dense_P=P, dense_grad=gl, dense_restart=rl,
             )
             k += 1
+
+    def _sync_tuples(self) -> Iterator[tuple]:
+        n = self.n
+        edge_list = self.graph.edges
+        P = metropolis_matrix(n, edge_list)
+        workers = np.arange(n, dtype=np.int32)
+        edges = (np.asarray(edge_list, dtype=np.int32).reshape(-1, 2)
+                 if edge_list else _EMPTY_EDGES)
+        copies = 2 * len(edge_list)
+        t = 0.0
+        while True:
+            t += float(self.sampler.sample_all().max())
+            yield (t, workers, P, edges, copies)
+
+    def _native_packed_stream(self) -> Optional[PackedEventStream]:
+        # The runner never routes the barrier stream through the sparse
+        # path (global_events forces the dense fallback), but the packed
+        # round-trip tests cover all five schedulers, so keep it native.
+        return CliquePackedStream(self, self._sync_tuples())

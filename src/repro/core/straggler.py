@@ -40,6 +40,12 @@ class StragglerModel:
 class TimeSampler:
     """Stateful sampler: ``sample(worker) -> duration`` of one local gradient."""
 
+    #: Duration *factors* (jitter × straggler slowdown) are iid across
+    #: workers and draws — per-worker structure lives entirely in ``base``
+    #: — so a pre-drawn flat factor stream may be assigned to workers in
+    #: any order (the fused on-device generator's gate, core/fused.py).
+    iid_horizon = True
+
     def __init__(self, model: StragglerModel):
         self.model = model
         self._rng = np.random.default_rng(model.seed)

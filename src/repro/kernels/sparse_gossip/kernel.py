@@ -98,18 +98,18 @@ def sparse_gossip_pallas(W: jax.Array, G: jax.Array, P_sub: jax.Array,
 def _scatter_rows_kernel(workers_ref, rows_ref, x_ref, o_ref):
     # workers_ref: (A,) scalar-prefetch; x_ref / o_ref: the same (1, Dt)
     # window of the aliased carry at row max(workers[a], 0); rows_ref: the
-    # compact row of lane a for valid lanes, of lane *0* for padded lanes
-    # (see the index map).  A valid lane replaces its window with its
-    # compact row.  A padded lane (workers[a] < 0, clamped to row 0) must
-    # write row 0's *final* content back: that is lane 0's compact row when
-    # worker 0 is active (workers are sorted valid-first, so 0 ∈ workers ⟺
-    # workers[0] == 0 — and rows_ref already holds that row), else the
-    # gathered window.  Deciding from workers[0] rather than re-reading the
-    # carry keeps the kernel correct whether the x gather observes the
-    # aliased buffer's updates (TPU read-through) or a stale pre-kernel
-    # copy (interpret mode).
+    # compact row of lane a for valid lanes, of *worker 0's lane* for
+    # padded lanes (see the index map).  A valid lane replaces its window
+    # with its compact row.  A padded lane (workers[a] < 0, clamped to
+    # row 0) must write row 0's *final* content back: that is the owning
+    # lane's compact row when some valid lane carries worker 0 — wherever
+    # that lane sits (merged block-diagonal rows interleave pads, so it
+    # need not be lane 0) — else the gathered window.  Deciding from the
+    # workers array rather than re-reading the carry keeps the kernel
+    # correct whether the x gather observes the aliased buffer's updates
+    # (TPU read-through) or a stale pre-kernel copy (interpret mode).
     a = pl.program_id(1)
-    keep_rows = (workers_ref[a] >= 0) | (workers_ref[0] == 0)
+    keep_rows = (workers_ref[a] >= 0) | jnp.any(workers_ref[...] == 0)
     o_ref[...] = jnp.where(keep_rows, rows_ref[...],
                            x_ref[...]).astype(o_ref.dtype)
 
@@ -128,16 +128,16 @@ def scatter_rows_pallas(X: jax.Array, rows: jax.Array, workers: jax.Array, *,
     logical update, the term that grows linearly with n and capped the
     sparse path's scaling (see BENCH_event_stream.json N≥128).
 
-    Race-freedom: valid active-set indices are unique per event and padded
-    lanes sit at the tail of the sorted lane axis, so the only repeated
-    output window is the trailing run of padded-lane row-0 writes — and the
-    kernel makes each of those re-write row 0's final content (see
-    ``_scatter_rows_kernel``), so repetition is idempotent.
+    Race-freedom: valid active-set indices are unique per event (disjoint
+    across the blocks of a merged row), so the only repeated output window
+    is the padded lanes' row-0 writes — and the kernel makes each of those
+    re-write row 0's final content (see ``_scatter_rows_kernel``), so
+    repetition is idempotent regardless of where pads sit in the lane axis
+    (``merge_event_groups`` interleaves them between blocks).
 
-    rows: (A, D) compact rows; workers: (A,) int32 — sorted valid lanes
-    first, ``-1`` padding trailing (the SparseEventBatch lane contract; the
-    padded-lane writeback relies on it).  Returns the updated (N, D) carry
-    (the same buffer when donation applies).
+    rows: (A, D) compact rows; workers: (A,) int32 with ``-1`` padding in
+    any position.  Returns the updated (N, D) carry (the same buffer when
+    donation applies).
     """
     N, D = X.shape
     A = workers.shape[0]
@@ -148,10 +148,15 @@ def scatter_rows_pallas(X: jax.Array, rows: jax.Array, workers: jax.Array, *,
         num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            # padded lanes read lane 0's row (the row-0 writeback candidate)
+            # padded lanes read worker 0's owning lane (the row-0 writeback
+            # candidate; argmax is 0 when no lane carries worker 0, and the
+            # kernel then keeps the gathered window instead)
             pl.BlockSpec((1, block_d),
-                         lambda d, a, workers: (jnp.where(workers[a] >= 0,
-                                                          a, 0), d)),
+                         lambda d, a, workers: (jnp.where(
+                             workers[a] >= 0, a,
+                             jnp.argmax(workers[...] == 0)
+                             .astype(jnp.int32)),
+                             d)),
             pl.BlockSpec((1, block_d),
                          lambda d, a, workers: (jnp.maximum(workers[a], 0), d)),
         ],

@@ -73,7 +73,10 @@ def smoke_spec() -> ExperimentSpec:
         scenarios=scenario_names(),        # every registered scenario
         scales=(8,),
         seeds=(0,),
-        mode="sparse_scan",
+        # auto resolves to the dense scan at N=8 (choose_mode crossover) —
+        # the sparse path's per-lane gathers only pay off at larger n, and
+        # CI should exercise the resolution logic end to end
+        mode="auto",
         max_events=24,
         eval_every=12,
         ref_eval_every=12,
@@ -107,11 +110,37 @@ def smoke_xl_spec() -> ExperimentSpec:
     )
 
 
+def fused_smoke_spec() -> ExperimentSpec:
+    """CI tier for ``mode="fused"`` — the device-resident event generator.
+
+    The two single-edge gossip algorithms whose event processes admit a
+    pure-JAX generator (AD-PSGD, AGP) under an iid-horizon scenario, for a
+    few blocks: proves the fused generate-and-consume scan compiles, runs,
+    and keeps exact communication accounting end to end.  Event-bounded by
+    construction — fused runs keep the virtual clock on device.
+    """
+    return ExperimentSpec(
+        name="fused_smoke",
+        algorithms=("ad_psgd", "agp"),
+        reference=None,
+        scenarios=("paper_default",),
+        scales=(8,),
+        seeds=(0,),
+        mode="fused",
+        block_size=16,
+        max_events=48,
+        max_time=None,
+        eval_every=24,
+        target_loss=0.9,
+    )
+
+
 PRESETS = {
     "paper_figures": paper_figures_spec,
     "paper_figures_xl": paper_figures_xl_spec,
     "smoke": smoke_spec,
     "smoke_xl": smoke_xl_spec,
+    "fused_smoke": fused_smoke_spec,
 }
 
 
