@@ -50,6 +50,67 @@ def dtype_table(artifact):
     return "\n".join(out)
 
 
+def telemetry_report(artifact):
+    """Per-scenario utilization table + log2-binned staleness histogram.
+
+    Rendered from the artifact's ``telemetry`` section (present when the
+    sweep ran with ``--telemetry``): one utilization row per (scenario, N,
+    algorithm) — mean/min worker utilization (busy / (busy + idle) on the
+    virtual clock), staleness stats, the DSGD-AAU 2N−4 bound check — then
+    one histogram block per scenario (counts of gradient firings whose
+    staleness s falls in [2^b − 1, 2^{b+1} − 1)).
+    """
+    rows = artifact.get("telemetry", [])
+    if not rows:
+        return "(no telemetry recorded — run with --telemetry)"
+    out = ["| scenario | N | algorithm | util mean | util min | "
+           "stale mean | stale max | bound | comm copies |",
+           "|---|---:|---|---:|---:|---:|---:|---|---:|"]
+    for r in sorted(rows, key=lambda r: (r["scenario"], r["n"],
+                                         r["algorithm"])):
+        b = r.get("staleness_bound")
+        bound = "—" if b is None else (
+            f"{b['observed_max']}/{b['bound']} "
+            + ("ok" if b["ok"] else "**VIOLATED**"))
+        out.append(
+            f"| {r['scenario']} | {r['n']} | {r['algorithm']} "
+            f"| {_f(r['utilization_mean']):.3f} "
+            f"| {_f(r['utilization_min']):.3f} "
+            f"| {_f(r['stale_mean']):.2f} | {r['stale_max']} "
+            f"| {bound} | {r['comm_copies']} |")
+    out.append("")
+    out.append("#### Staleness histograms (gradient firings per log2 bin)")
+    out.append("")
+    for scen in sorted({r["scenario"] for r in rows}):
+        scen_rows = [r for r in rows if r["scenario"] == scen]
+        nbins = max((len(r["stale_hist"]) for r in scen_rows), default=0)
+        # drop all-zero tail bins shared by every algorithm in the scenario
+        last = max((max((i for i, v in enumerate(r["stale_hist"]) if v),
+                        default=0) for r in scen_rows), default=0)
+        hdr = [f"[{2**b - 1},{2**(b + 1) - 2}]" if b < nbins - 1 else "tail"
+               for b in range(last + 1)]
+        out.append(f"**{scen}**")
+        out.append("")
+        out.append("| N | algorithm | s∈" + " | s∈".join(hdr) + " |")
+        out.append("|---:|---|" + "---:|" * (last + 1))
+        for r in sorted(scen_rows, key=lambda r: (r["n"], r["algorithm"])):
+            vals = [str(v) for v in r["stale_hist"][:last + 1]]
+            out.append(f"| {r['n']} | {r['algorithm']} | "
+                       + " | ".join(vals) + " |")
+        out.append("")
+        occ = [(r, r["bucket_occupancy"]) for r in scen_rows
+               if r.get("bucket_occupancy")]
+        for r, rungs in occ:
+            per = "; ".join(f"A={o['A']}: {o['events']} ev, "
+                            f"{100 * _f(o['lane_fill']):.1f}% lanes"
+                            for o in rungs)
+            out.append(f"- bucket occupancy {r['algorithm']}/N{r['n']}: "
+                       f"{per}")
+        if occ:
+            out.append("")
+    return "\n".join(out)
+
+
 def convergence_csv(artifact):
     """Flat CSV of the seed-averaged convergence curves (plotting input)."""
     out = ["scenario,n,algorithm,k,time_mean,loss_mean,loss_std,metric_mean"]
@@ -68,6 +129,8 @@ def paper_figures(path="BENCH_paper_figures.json"):
     print(speedup_table(artifact))
     print("\n### dtype policy (fp32 vs bf16 worker state)\n")
     print(dtype_table(artifact))
+    print("\n### Telemetry (per-worker utilization and staleness)\n")
+    print(telemetry_report(artifact))
     print("\n### Convergence curves (CSV)\n")
     print(convergence_csv(artifact))
 

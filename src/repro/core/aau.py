@@ -47,6 +47,8 @@ from typing import Callable, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs.metrics import dense_metrics_update, sparse_metrics_update
+
 Pytree = object
 
 
@@ -95,19 +97,20 @@ def masked_gossip_step(
     # worker state stays bf16 through the update instead of being promoted
     # by the f32 scalar (a scan carry must keep its dtype).
     scaled = eta * gm.astype(jnp.float32)
-    if use_kernel:
-        # Fused Pallas path: Pᵀ·(W − η·mask⊙G) in one kernel per leaf.
-        from repro.kernels.gossip_mix import ops as gossip_ops
-        Wn = jax.tree.map(
-            lambda w, g: gossip_ops.masked_gossip_mix(
-                w, g, P.astype(w.dtype), scaled.astype(w.dtype)),
-            W, grads)
-    else:
-        Wg = jax.tree.map(lambda w, g: w - expand(scaled, w) * g, W, grads)
-        Wn = gossip_mix_dense(Wg, P, use_kernel=False)
-    yn = jnp.einsum("n,nj->j", y, P.astype(y.dtype))
-    rm = restart_mask
-    Sn = jax.tree.map(lambda s, w: jnp.where(expand(rm, w) > 0, w, s), S, Wn)
+    with jax.named_scope("masked_gossip_step"):
+        if use_kernel:
+            # Fused Pallas path: Pᵀ·(W − η·mask⊙G) in one kernel per leaf.
+            from repro.kernels.gossip_mix import ops as gossip_ops
+            Wn = jax.tree.map(
+                lambda w, g: gossip_ops.masked_gossip_mix(
+                    w, g, P.astype(w.dtype), scaled.astype(w.dtype)),
+                W, grads)
+        else:
+            Wg = jax.tree.map(lambda w, g: w - expand(scaled, w) * g, W, grads)
+            Wn = gossip_mix_dense(Wg, P, use_kernel=False)
+        yn = jnp.einsum("n,nj->j", y, P.astype(y.dtype))
+        rm = restart_mask
+        Sn = jax.tree.map(lambda s, w: jnp.where(expand(rm, w) > 0, w, s), S, Wn)
     return Wn, Sn, yn
 
 
@@ -252,23 +255,56 @@ def masked_gossip_scan(
     return carry
 
 
-def build_event_scan(loss_fn: Callable, use_kernel: bool = False):
+def build_event_scan(loss_fn: Callable, use_kernel: bool = False,
+                     telemetry: bool = False):
     """Returns jit(block)(W, S, y, ptr, pools, P_seq, gm_seq, rm_seq, etas).
 
     One compiled call advances the stacked state through E events — the
     block-compiled execution model (module docstring, mode 2).  Block length
     and pool size are baked into the trace, so keep them fixed across calls
     (the runner pads truncated blocks with no-op events).
+
+    With ``telemetry`` the block additionally threads a
+    :class:`~repro.obs.metrics.MetricsCarry` ``M`` (inserted after ``ptr``)
+    and consumes per-event telemetry xs — ``ts`` (E,) f32 event clocks,
+    ``fin`` (E, n) f32 raw completion clocks, ``ks`` (E,) i32 event
+    indices, ``copies`` (E,) i32 — updating ``M`` once per scan step on
+    device.  The ``(W, S, y, ptr)`` trajectory is bit-identical either
+    way: the metrics update reads the state but never writes it.
     """
     grad_fn = jax.grad(loss_fn)
 
-    @jax.jit
-    def block(W, S, y, ptr, pools, P_seq, grad_masks, restart_masks, etas):
-        return masked_gossip_scan(
-            W, S, y, ptr, pools, grad_fn, P_seq, grad_masks, restart_masks,
-            etas, use_kernel=use_kernel)
+    if not telemetry:
+        @jax.jit
+        def block(W, S, y, ptr, pools, P_seq, grad_masks, restart_masks,
+                  etas):
+            return masked_gossip_scan(
+                W, S, y, ptr, pools, grad_fn, P_seq, grad_masks,
+                restart_masks, etas, use_kernel=use_kernel)
 
-    return block
+        return block
+
+    @jax.jit
+    def block_tel(W, S, y, ptr, M, pools, P_seq, grad_masks, restart_masks,
+                  etas, ts, fin, ks, copies):
+        def body(carry, ev):
+            W, S, y, ptr, M = carry
+            P, gm, rm, eta, t, f, k, cp = ev
+            batches = select_pool_batch(pools, ptr)
+            grads = jax.vmap(grad_fn)(S, batches)
+            W, S, y = masked_gossip_step(
+                W, S, y, grads, P, gm, rm, eta, use_kernel=use_kernel)
+            ptr = ptr + rm.astype(ptr.dtype)
+            with jax.named_scope("metrics_update"):
+                M = dense_metrics_update(M, P, gm, rm, t, f, k, cp)
+            return (W, S, y, ptr, M), None
+
+        carry, _ = jax.lax.scan(
+            body, (W, S, y, ptr, M),
+            (P_seq, grad_masks, restart_masks, etas, ts, fin, ks, copies))
+        return carry
+
+    return block_tel
 
 
 # ---------------------------------------------------------------------------
@@ -380,10 +416,11 @@ def sparse_event_update(
     gidx = jnp.where(valid, workers, 0)      # clamped gather index
     sidx = jnp.where(valid, workers, n)      # OOB ⇒ scatter drops the lane
     # -- gather ------------------------------------------------------
-    Sa = jax.tree.map(lambda s: s[gidx], S)
-    ptra = ptr[gidx]
-    batches = select_pool_batch_at(pools, gidx, ptra)
-    grads = jax.vmap(grad_fn)(Sa, batches)   # A gradient lanes, not n
+    with jax.named_scope("sparse_gather"):
+        Sa = jax.tree.map(lambda s: s[gidx], S)
+        ptra = ptr[gidx]
+        batches = select_pool_batch_at(pools, gidx, ptra)
+        grads = jax.vmap(grad_fn)(Sa, batches)   # A gradient lanes, not n
     scaled = eta * (gm & valid).astype(jnp.float32)
     # -- compute: P_subᵀ·(W_a − η·mask⊙G) ----------------------------
     if use_kernel:
@@ -410,34 +447,36 @@ def sparse_event_update(
     Sn = jax.tree.map(lambda s, w: jnp.where(expand(rm, w) > 0, w, s),
                       Sa, Wn)
     # -- scatter -----------------------------------------------------
-    if use_kernel:
-        # kernel scatter-into-carry: the (n, ...) parameter leaves are
-        # updated through input/output aliasing (only the A active
-        # windows are written) instead of XLA's fresh-buffer scatter;
-        # the O(n) vector leaves (y, ptr) stay on the cheap XLA path.
-        W = jax.tree.map(
-            lambda w, rows: sparse_ops.sparse_scatter_rows(
-                w, rows.astype(w.dtype), workers),
-            W, Wn)
-        S = jax.tree.map(
-            lambda s, rows: sparse_ops.sparse_scatter_rows(
-                s, rows.astype(s.dtype), workers),
-            S, Sn)
-    else:
-        W = jax.tree.map(
-            lambda w, rows: w.at[sidx].set(rows.astype(w.dtype),
-                                           mode="drop"),
-            W, Wn)
-        S = jax.tree.map(
-            lambda s, rows: s.at[sidx].set(rows.astype(s.dtype),
-                                           mode="drop"),
-            S, Sn)
-    y = y.at[sidx].set(ya.astype(y.dtype), mode="drop")
-    ptr = ptr.at[sidx].set(ptra + rm.astype(ptr.dtype), mode="drop")
+    with jax.named_scope("sparse_scatter"):
+        if use_kernel:
+            # kernel scatter-into-carry: the (n, ...) parameter leaves are
+            # updated through input/output aliasing (only the A active
+            # windows are written) instead of XLA's fresh-buffer scatter;
+            # the O(n) vector leaves (y, ptr) stay on the cheap XLA path.
+            W = jax.tree.map(
+                lambda w, rows: sparse_ops.sparse_scatter_rows(
+                    w, rows.astype(w.dtype), workers),
+                W, Wn)
+            S = jax.tree.map(
+                lambda s, rows: sparse_ops.sparse_scatter_rows(
+                    s, rows.astype(s.dtype), workers),
+                S, Sn)
+        else:
+            W = jax.tree.map(
+                lambda w, rows: w.at[sidx].set(rows.astype(w.dtype),
+                                               mode="drop"),
+                W, Wn)
+            S = jax.tree.map(
+                lambda s, rows: s.at[sidx].set(rows.astype(s.dtype),
+                                               mode="drop"),
+                S, Sn)
+        y = y.at[sidx].set(ya.astype(y.dtype), mode="drop")
+        ptr = ptr.at[sidx].set(ptra + rm.astype(ptr.dtype), mode="drop")
     return W, S, y, ptr
 
 
-def build_sparse_event_scan(loss_fn: Callable, use_kernel: bool = False):
+def build_sparse_event_scan(loss_fn: Callable, use_kernel: bool = False,
+                            telemetry: bool = False):
     """Returns jit(block)(W, S, y, ptr, pools, workers, P_sub, gm, rm, etas).
 
     One compiled call advances the stacked state through E active-set
@@ -451,14 +490,56 @@ def build_sparse_event_scan(loss_fn: Callable, use_kernel: bool = False):
     arguments (the runner's contract), so XLA reuses their n-row buffers
     in place instead of allocating a fresh copy per block — at N=1024 the
     W+S stack is ~0.7 GB of float32, twice per block without donation.
+
+    With ``telemetry`` the block signature gains a
+    :class:`~repro.obs.metrics.MetricsCarry` ``M`` after ``ptr`` (donated
+    with the rest of the carry) and per-event xs — ``ts``/``fin`` (E, A)
+    f32 per-lane event / raw-completion clocks, ``ks`` (E, A) i32 per-lane
+    event indices (merged rows carry each member event's own clock and
+    index), ``copies`` (E,) i32.  The state trajectory is bit-identical
+    to the non-telemetry block's; padded no-op rows skip the metrics
+    update along with the state update (same ``lax.cond``).
     """
     grad_fn = jax.grad(loss_fn)
 
-    @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
-    def block(W, S, y, ptr, pools, workers_seq, P_sub_seq, grad_masks,
-              restart_masks, etas):
-        return sparse_gossip_scan(
-            W, S, y, ptr, pools, grad_fn, workers_seq, P_sub_seq, grad_masks,
-            restart_masks, etas, use_kernel=use_kernel)
+    if not telemetry:
+        @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+        def block(W, S, y, ptr, pools, workers_seq, P_sub_seq, grad_masks,
+                  restart_masks, etas):
+            return sparse_gossip_scan(
+                W, S, y, ptr, pools, grad_fn, workers_seq, P_sub_seq,
+                grad_masks, restart_masks, etas, use_kernel=use_kernel)
 
-    return block
+        return block
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 4))
+    def block_tel(W, S, y, ptr, M, pools, workers_seq, P_sub_seq,
+                  grad_masks, restart_masks, etas, ts, fin, ks, copies):
+        if etas.ndim == 1:
+            etas_seq = jnp.broadcast_to(etas[:, None], grad_masks.shape)
+        else:
+            etas_seq = etas
+
+        def body(carry, ev):
+            workers, P_sub, gm, rm, eta, t, f, k, cp = ev
+
+            def step(c):
+                W, S, y, ptr, M = c
+                W, S, y, ptr = sparse_event_update(
+                    W, S, y, ptr, pools, grad_fn, workers, P_sub, gm, rm,
+                    eta, use_kernel=use_kernel)
+                with jax.named_scope("metrics_update"):
+                    M = sparse_metrics_update(M, workers, P_sub, gm, rm,
+                                              t, f, k, cp)
+                return W, S, y, ptr, M
+
+            return jax.lax.cond(workers[0] >= 0, step, lambda c: c,
+                                carry), None
+
+        carry, _ = jax.lax.scan(
+            body, (W, S, y, ptr, M),
+            (workers_seq, P_sub_seq, grad_masks, restart_masks, etas_seq,
+             ts, fin, ks, copies))
+        return carry
+
+    return block_tel

@@ -111,8 +111,10 @@ class _PairPackedStream(PackedEventStream):
         edges, n_edges = a["edges"], a["n_edges"]
         times, n_workers = a["times"], a["n_workers"]
         copies = a["param_copies_sent"]
+        finish = a["finish"]
         for j in range(k):
             t, i = pop(heap)
+            t_raw = t                  # raw completion, before any lock wait
             nbrs = nbrs_list[i]
             m = len(nbrs)
             if m:
@@ -120,6 +122,10 @@ class _PairPackedStream(PackedEventStream):
                     t = (t if t > lock_free_at else lock_free_at) + lock_dt
                     lock_free_at = t
                 r = int(nbrs[rng.integers(0, m)])
+                # the finisher's lane carries its raw completion clock; the
+                # passive partner (rm=False) reads the event clock
+                finish[j] = t
+                finish[j, 0 if i < r else 1] = t_raw
                 if i < r:
                     workers[j, 0] = i
                     workers[j, 1] = r
@@ -145,6 +151,7 @@ class _PairPackedStream(PackedEventStream):
                 P_sub[j, 0, 0] = 1.0
                 gm[j, 0] = True
                 rm[j, 0] = True
+                finish[j] = t          # no lock: fires at its own completion
             times[j] = t
             push(heap, (t + sampler.sample(i), i))
         self._lock_free_at = lock_free_at
@@ -182,15 +189,21 @@ class _SingleEdgeScheduler(Scheduler):
         """(workers, P_sub, grad_lanes, copies) for finisher i and pick r."""
         raise NotImplementedError
 
-    def _pair_event(self, k: int, t: float, i: int, r: int) -> ScheduleEvent:
+    def _pair_event(self, k: int, t: float, i: int, r: int,
+                    t_raw: Optional[float] = None) -> ScheduleEvent:
         workers, P_sub, lanes, copies = self._pair_payload(i, r)
         a = int(workers[0])
         b = int(workers[1])
+        # the finisher's lane carries its raw (pre-lock) completion clock;
+        # the passive partner's lane reads the event clock (its restart mask
+        # is False — telemetry never splits busy/idle on it)
+        fin = np.full(2, t)
+        fin[0 if i < r else 1] = t if t_raw is None else t_raw
         return ScheduleEvent(
             k=k, time=t, n=self.n, workers=workers, P_sub=P_sub,
             grad_lanes=lanes, restart_lanes=lanes,
             edges=np.array(((a, b),), dtype=np.int32),
-            param_copies_sent=copies,
+            param_copies_sent=copies, finish_lanes=fin,
         )
 
     def _isolated_event(self, k: int, t: float, i: int) -> ScheduleEvent:
@@ -308,6 +321,7 @@ class _SingleEdgeScheduler(Scheduler):
         lock_free_at = 0.0
         while True:
             t, i = pop(heap)
+            t_raw = t
             if out is not None:
                 while out and out[0][0] <= t:
                     ev = heapq.heappop(out)[2]
@@ -322,7 +336,7 @@ class _SingleEdgeScheduler(Scheduler):
                     t = (t if t > lock_free_at else lock_free_at) + lock_dt
                     lock_free_at = t
                 r = int(nbrs[rng.integers(0, m)])
-                ev = self._pair_event(k, t, i, r)
+                ev = self._pair_event(k, t, i, r, t_raw=t_raw)
             else:
                 # an isolated worker averages with nobody: no neighbor draw,
                 # no lock acquisition, no copies moved — its gradient lands
@@ -363,6 +377,7 @@ class _SingleEdgeScheduler(Scheduler):
             for j in range(K):
                 i = int(times.argmin())
                 t = float(times[i])
+                t_raw = t
                 if out is not None:
                     while out and out[0][0] <= t:
                         ev = heapq.heappop(out)[2]
@@ -376,7 +391,7 @@ class _SingleEdgeScheduler(Scheduler):
                         t = (t if t > lock_free_at else lock_free_at) + lock_dt
                         lock_free_at = t
                     r = int(nbrs[int(picks[j] * m)])
-                    ev = self._pair_event(k, t, i, r)
+                    ev = self._pair_event(k, t, i, r, t_raw=t_raw)
                 else:
                     ev = self._isolated_event(k, t, i)
                 if out is None:
@@ -448,20 +463,25 @@ class PragueScheduler(Scheduler):
     def _group_tuples(self) -> Iterator[tuple]:
         """The Prague event process as packed-ready clique tuples.
 
-        Yields ``(t, workers, P_sub, edges, copies)`` per group all-reduce —
-        the single source of truth consumed both by :meth:`events` (object
-        wrapper) and by the array-native :class:`CliquePackedStream`.
+        Yields ``(t, workers, P_sub, edges, copies, finish)`` per group
+        all-reduce — ``finish`` the members' raw completion clocks (the
+        group fires when its *last* member finishes; earlier members waited
+        since their own) — the single source of truth consumed both by
+        :meth:`events` (object wrapper) and by the array-native
+        :class:`CliquePackedStream`.
         """
         n = self.n
         heap: List[Tuple[float, int]] = []
         for i, dt in enumerate(self.sampler.sample_batch(np.arange(n))):
             heapq.heappush(heap, (dt, i))
+        finish_at = np.zeros(n, dtype=np.float64)
         in_group: Dict[int, int] = {}          # worker -> group id
         groups: Dict[int, Set[int]] = {}       # group id -> members
         ready: Dict[int, Set[int]] = {}        # group id -> members finished
         next_gid = 0
         while True:
             t, i = heapq.heappop(heap)
+            finish_at[i] = t
             if i not in in_group:
                 # Group Generator: form a fresh group around i from workers
                 # not currently claimed by a pending group.
@@ -490,7 +510,7 @@ class PragueScheduler(Scheduler):
                    np.stack([widx[iu], widx[ju]], axis=1) if g > 1
                    else _EMPTY_EDGES,
                    # ring partial all-reduce: 2·(g−1)/g vector-copies per member
-                   2 * (g - 1))
+                   2 * (g - 1), finish_at[widx].copy())
             for m, dt in zip(members, self.sampler.sample_batch(members)):
                 del in_group[m]
                 heapq.heappush(heap, (t + dt, m))
@@ -498,13 +518,14 @@ class PragueScheduler(Scheduler):
 
     def events(self) -> Iterator[ScheduleEvent]:
         n = self.n
-        for k, (t, widx, P_sub, edges, copies) in \
+        for k, (t, widx, P_sub, edges, copies, fin) in \
                 enumerate(self._group_tuples()):
             lanes = np.ones(len(widx), dtype=bool)
             yield ScheduleEvent(
                 k=k, time=t, n=n, workers=widx, P_sub=P_sub,
                 grad_lanes=lanes, restart_lanes=lanes,
                 edges=edges, param_copies_sent=copies,
+                finish_lanes=fin,
             )
 
     def _native_packed_stream(self) -> Optional[PackedEventStream]:

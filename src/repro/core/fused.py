@@ -53,7 +53,7 @@ _LANE_SELF2 = np.array([True, False])
 
 
 def build_fused_pair_scan(loss_fn: Callable, spec: Dict[str, object],
-                          use_kernel: bool = False):
+                          use_kernel: bool = False, telemetry: bool = False):
     """Compile the fused generate-and-consume block for a pair scheduler.
 
     ``spec`` is ``_SingleEdgeScheduler.fused_spec()`` — the static device
@@ -70,6 +70,16 @@ def build_fused_pair_scan(loss_fn: Callable, spec: Dict[str, object],
     clocks (the caller reads ``t_seq[-1]`` for history points).  The
     carry buffers are donated — thread the returned carry into the next
     block, never reuse the arguments.
+
+    With ``telemetry`` the signature is unchanged; only the scan's
+    per-event outputs widen from ``t_ev`` to ``(t_ev, i, p, t)`` — each
+    event's lock-shifted clock, finisher, partner (−1 when isolated) and
+    raw completion.  The runner buffers those outputs per block (device
+    arrays, never synced) and folds the whole run's stream into its
+    :class:`~repro.obs.metrics.MetricsCarry` once at drain time via
+    :func:`~repro.obs.metrics.fused_metrics_fold`, so the fused path stays
+    free of per-event host work *and* of in-block telemetry arithmetic.
+    The state trajectory is unchanged.
     """
     grad_fn = jax.grad(loss_fn)
     deg = jnp.asarray(spec["deg"], dtype=jnp.int32)
@@ -84,42 +94,63 @@ def build_fused_pair_scan(loss_fn: Callable, spec: Dict[str, object],
     lane_self = jnp.asarray(_LANE_SELF2)
     copies_pair = int(spec["copies_pair"])
 
+    def _event(W, S, y, ptr, pools, times, lock_free, factor, pick, eta):
+        """One generated event: returns the updated state plus the event's
+        identity ``(i, p, t, t_ev)`` — finisher, partner (−1 when
+        isolated), raw and lock-shifted clocks — from which the callers
+        derive comm/telemetry payloads (workers are the sorted pair, the
+        finisher's lane is the grad/restart lane, a pair sends
+        ``copies_pair`` copies)."""
+        i = jnp.argmin(times).astype(jnp.int32)
+        t = times[i]
+        d = deg[i]
+        has_nbr = d > 0
+        if lock_dt:
+            # serialized atomic averaging (isolated workers skip it)
+            t_pair = jnp.maximum(t, lock_free) + jnp.float32(lock_dt)
+            t_ev = jnp.where(has_nbr, t_pair, t)
+            lock_free = jnp.where(has_nbr, t_ev, lock_free)
+        else:
+            t_ev = t
+        # ⌊pick·deg⌋ clamped: pick ∈ [0, 1) but f32 rounding at huge
+        # degree could land exactly on deg
+        slot = jnp.minimum((pick * d.astype(jnp.float32))
+                           .astype(jnp.int32),
+                           jnp.maximum(d - 1, 0))
+        r = nbr_table[i, slot]
+        first = i < r
+        pair = jnp.where(first, jnp.stack([i, r]), jnp.stack([r, i]))
+        workers = jnp.where(has_nbr, pair,
+                            jnp.stack([i, jnp.full((), -1, jnp.int32)]))
+        P_sub = jnp.where(has_nbr, jnp.where(first, P1, P2), P_self)
+        lanes = jnp.where(has_nbr,
+                          jnp.where(first, lane1, lane2), lane_self)
+        W, S, y, ptr = sparse_event_update(
+            W, S, y, ptr, pools, grad_fn, workers, P_sub, lanes, lanes,
+            eta, use_kernel=use_kernel)
+        times = times.at[i].set(t_ev + base[i] * factor)
+        p = jnp.where(has_nbr, r, jnp.int32(-1))
+        return W, S, y, ptr, times, lock_free, i, p, t, t_ev
+
     @functools.partial(jax.jit, donate_argnums=(0, 1, 2, 3, 5, 6, 7))
     def block(W, S, y, ptr, pools, times, lock_free, comm,
               factors, picks, etas):
         def body(carry, xs):
             W, S, y, ptr, times, lock_free, comm = carry
             factor, pick, eta = xs
-            i = jnp.argmin(times).astype(jnp.int32)
-            t = times[i]
-            d = deg[i]
-            has_nbr = d > 0
-            if lock_dt:
-                # serialized atomic averaging (isolated workers skip it)
-                t_pair = jnp.maximum(t, lock_free) + jnp.float32(lock_dt)
-                t_ev = jnp.where(has_nbr, t_pair, t)
-                lock_free = jnp.where(has_nbr, t_ev, lock_free)
-            else:
-                t_ev = t
-            # ⌊pick·deg⌋ clamped: pick ∈ [0, 1) but f32 rounding at huge
-            # degree could land exactly on deg
-            slot = jnp.minimum((pick * d.astype(jnp.float32))
-                               .astype(jnp.int32),
-                               jnp.maximum(d - 1, 0))
-            r = nbr_table[i, slot]
-            first = i < r
-            pair = jnp.where(first, jnp.stack([i, r]), jnp.stack([r, i]))
-            workers = jnp.where(has_nbr, pair,
-                                jnp.stack([i, jnp.full((), -1, jnp.int32)]))
-            P_sub = jnp.where(has_nbr, jnp.where(first, P1, P2), P_self)
-            lanes = jnp.where(has_nbr,
-                              jnp.where(first, lane1, lane2), lane_self)
-            W, S, y, ptr = sparse_event_update(
-                W, S, y, ptr, pools, grad_fn, workers, P_sub, lanes, lanes,
-                eta, use_kernel=use_kernel)
-            comm = comm + jnp.where(has_nbr, copies_pair, 0).astype(comm.dtype)
-            times = times.at[i].set(t_ev + base[i] * factor)
-            return (W, S, y, ptr, times, lock_free, comm), t_ev
+            (W, S, y, ptr, times, lock_free, i, p, t,
+             t_ev) = _event(W, S, y, ptr, pools, times, lock_free,
+                            factor, pick, eta)
+            comm = comm + jnp.where(p >= 0, copies_pair,
+                                    0).astype(comm.dtype)
+            # With telemetry the scan additionally streams each event's
+            # identity (finisher, partner, raw clock) — the runner buffers
+            # these per block, device-resident, and folds them ONCE per run
+            # via repro.obs.metrics.fused_metrics_fold; metrics work inside
+            # the block (even a per-block fold) is a measurable slice of
+            # the fused block's toy-scale runtime.
+            ys = (t_ev, i, p, t) if telemetry else t_ev
+            return (W, S, y, ptr, times, lock_free, comm), ys
 
         return jax.lax.scan(body, (W, S, y, ptr, times, lock_free, comm),
                             (factors, picks, etas))

@@ -49,8 +49,7 @@ testing (tests/test_event_stream.py) and as the reference semantics.
 from __future__ import annotations
 
 import dataclasses
-import warnings
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +60,8 @@ from repro.core.aau import (build_event_scan, build_event_step,
 from repro.core.scheduler import (BucketedSparseEventBatch, EventBatch,
                                   Scheduler, SparseEventBatch,
                                   merge_event_groups)
+from repro.obs import RunLogger, init_metrics, metrics_summary
+from repro.obs.metrics import dense_metrics_update, fused_metrics_fold
 from repro.utils.tree import tree_size, tree_stack
 
 
@@ -106,9 +107,16 @@ class RunResult:
     total_time: float
     total_comm_copies: int
     param_count: int
+    # Scalar width of the trainer's dtype policy (bf16 runs send 2-byte
+    # scalars, not the old hardcoded 4) and, when the trainer ran with
+    # telemetry=True, the drained device-counter summary
+    # (repro.obs.metrics.metrics_summary).
+    bytes_per_scalar: int = 4
+    telemetry: Optional[Dict] = None
 
-    def comm_bytes(self, bytes_per_scalar: int = 4) -> int:
-        return self.total_comm_copies * self.param_count * bytes_per_scalar
+    def comm_bytes(self, bytes_per_scalar: Optional[int] = None) -> int:
+        bps = self.bytes_per_scalar if bytes_per_scalar is None else bytes_per_scalar
+        return self.total_comm_copies * self.param_count * bps
 
     def time_to_loss(self, target: float) -> Optional[float]:
         for p in self.history:
@@ -160,6 +168,14 @@ class DecentralizedTrainer:
                                             # packed chunks directly (bit-
                                             # identical; False forces the
                                             # per-event object adapter)
+        telemetry: bool = False,            # device-resident per-worker
+                                            # counters (repro.obs): drained
+                                            # once per run into
+                                            # RunResult.telemetry
+        run_log: Optional[Union[str, object]] = None,
+                                            # JSONL structured run log: a
+                                            # path, a file-like object, or
+                                            # None (disabled)
     ):
         if mode not in ("scan", "sparse_scan", "per_event", "auto", "fused"):
             raise ValueError(
@@ -195,6 +211,8 @@ class DecentralizedTrainer:
         self.batch_pool = batch_pool if batch_pool is None else max(1, batch_pool)
         self.events_per_step = events_per_step
         self.native_generation = native_generation
+        self.telemetry = bool(telemetry)
+        self._log = RunLogger(run_log)
         rng = jax.random.PRNGKey(seed)
         if same_init:
             p0 = init_params_fn(rng)
@@ -222,6 +240,12 @@ class DecentralizedTrainer:
         self._pools = None          # (n, batch_pool, ...) on-device sample pools
         self._ptr = None            # (n,) int32 restart counters
         self._eval_accum = None     # jitted eval → device-buffer accumulator
+        self._metrics = None        # MetricsCarry device accumulators
+        self._metrics_step = None   # per-event jitted dense metrics update
+        self._bucket_occ = None     # host per-rung occupancy aggregation
+        self._fused_payload = None  # per-block (t_ev, i, p, t_raw) device
+                                    #   streams, folded once at drain
+        self._fused_fold = None     # jitted fused_metrics_fold
 
     def _cast(self, tree):
         """Apply the worker-state dtype policy to a pytree's float leaves."""
@@ -231,12 +255,26 @@ class DecentralizedTrainer:
             if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating) else x,
             tree)
 
+    # one compiled call per reset: plain init_metrics is 11 separate device
+    # puts, a measurable per-run fixed cost on the overhead-asserted paths
+    _init_metrics = staticmethod(jax.jit(init_metrics, static_argnums=0))
+
+    def _ensure_metrics(self):
+        if self.telemetry and self._metrics is None:
+            self._metrics = self._init_metrics(self.n)
+            if self._bucket_occ is None:
+                self._bucket_occ = {}
+
     # -- legacy per-event state -------------------------------------------
     def _ensure_per_event(self):
         if self._step is None:
+            self._log.log("compile", key="per_event")
             self._step = build_event_step(self.loss_fn, use_kernel=self.use_kernel)
             self._batches = self._cast(
                 tree_stack([self._draw(i) for i in range(self.n)]))
+            if self.telemetry:
+                self._metrics_step = jax.jit(dense_metrics_update)
+        self._ensure_metrics()
 
     def _draw(self, worker: int):
         b = self.worker_batch_fn(worker, int(self._draw_count[worker]))
@@ -308,14 +346,20 @@ class DecentralizedTrainer:
     def _ensure_scan(self, max_events: Optional[int] = None,
                      max_time: Optional[float] = None):
         if self._scan is None:
-            self._scan = build_event_scan(self.loss_fn, use_kernel=self.use_kernel)
+            self._log.log("compile", key="scan", telemetry=self.telemetry)
+            self._scan = build_event_scan(self.loss_fn,
+                                          use_kernel=self.use_kernel,
+                                          telemetry=self.telemetry)
+        self._ensure_metrics()
         self._ensure_pools(max_events, max_time)
 
     def _ensure_sparse(self, max_events: Optional[int] = None,
                        max_time: Optional[float] = None):
         if self._sparse is None:
+            self._log.log("compile", key="sparse_scan", telemetry=self.telemetry)
             self._sparse = build_sparse_event_scan(
-                self.loss_fn, use_kernel=self.use_kernel)
+                self.loss_fn, use_kernel=self.use_kernel,
+                telemetry=self.telemetry)
             # The sparse block donates its (W, S, y, ptr) carry arguments.
             # With same_init the snapshot stack S still *is* W (one shared
             # buffer) until the first update — donating that buffer through
@@ -323,6 +367,7 @@ class DecentralizedTrainer:
             if any(w is s for w, s in zip(jax.tree.leaves(self.W),
                                           jax.tree.leaves(self.S))):
                 self.S = jax.tree.map(jnp.array, self.S)
+        self._ensure_metrics()
         self._ensure_pools(max_events, max_time)
 
     def _etas_for(self, batch_E: int, valid_E: int, rounds: int) -> np.ndarray:
@@ -341,24 +386,48 @@ class DecentralizedTrainer:
         if E < target:
             batch = batch.pad_to(target)
         etas = self._etas_for(batch.E, E, rounds)
-        self.W, self.S, self.y, self._ptr = self._scan(
-            self.W, self.S, self.y, self._ptr, self._pools,
+        args = (
+            self.W, self.S, self.y, self._ptr,
             jnp.asarray(batch.P, dtype=jnp.float32),
             jnp.asarray(batch.grad_workers),
             jnp.asarray(batch.restart_workers),
             jnp.asarray(etas, dtype=jnp.float32),
         )
+        if not self.telemetry:
+            with jax.profiler.TraceAnnotation("dispatch:scan"):
+                self.W, self.S, self.y, self._ptr = self._scan(
+                    *args[:4], self._pools, *args[4:])
+            return
+        self._log.log("block_dispatch", mode="scan", events=E,
+                      padded=batch.E, rounds=rounds)
+        Ep = batch.E
+        fin = batch.finish if batch.finish is not None \
+            else np.broadcast_to(batch.times[:, None], (Ep, self.n))
+        with jax.profiler.TraceAnnotation("dispatch:scan"):
+            # casts happen host-side: a cross-dtype jnp.asarray would pay a
+            # per-block convert_element_type dispatch
+            (self.W, self.S, self.y, self._ptr, self._metrics) = self._scan(
+                *args[:4], self._metrics, self._pools, *args[4:],
+                jnp.asarray(np.asarray(batch.times, dtype=np.float32)),
+                jnp.asarray(np.asarray(fin, dtype=np.float32)),
+                jnp.asarray(np.arange(rounds, rounds + Ep, dtype=np.int32)),
+                jnp.asarray(np.asarray(batch.param_copies_sent,
+                                       dtype=np.int32)),
+            )
 
     def _dispatch_sparse_block(self, batch: SparseEventBatch, rounds: int,
                                target: Optional[int] = None,
-                               lane_off: Optional[np.ndarray] = None) -> None:
+                               lane_off: Optional[np.ndarray] = None,
+                               lane_ts: Optional[np.ndarray] = None) -> None:
         """One compiled call over active-set arrays: O(A·D) per event.
 
         ``lane_off`` marks ``batch`` as the output of ``merge_event_groups``:
         a (E, A) int array of absolute source-event offsets per lane, from
         which per-*lane* step sizes are built (each merged lane keeps the η
         its source event would have used — the decay schedule is indexed by
-        event, not by scan step, so merging stays bit-exact).
+        event, not by scan step, so merging stays bit-exact).  ``lane_ts``
+        (telemetry, merged path only) carries the matching per-lane source
+        event clocks, gathered the same way.
         """
         E = batch.E
         if target is None:
@@ -371,14 +440,52 @@ class DecentralizedTrainer:
             etas = np.zeros((batch.E, batch.A))
             etas[:E] = self.eta0 * self.eta_decay ** (
                 (rounds + lane_off) // self.eta_decay_every)
-        self.W, self.S, self.y, self._ptr = self._sparse(
-            self.W, self.S, self.y, self._ptr, self._pools,
+        args = (
+            self.W, self.S, self.y, self._ptr,
             jnp.asarray(batch.workers),
             jnp.asarray(batch.P_sub, dtype=jnp.float32),
             jnp.asarray(batch.grad_workers),
             jnp.asarray(batch.restart_workers),
             jnp.asarray(etas, dtype=jnp.float32),
         )
+        if not self.telemetry:
+            with jax.profiler.TraceAnnotation("dispatch:sparse_scan"):
+                self.W, self.S, self.y, self._ptr = self._sparse(
+                    *args[:4], self._pools, *args[4:])
+            return
+        self._log.log("block_dispatch", mode="sparse_scan", events=E,
+                      padded=batch.E, lanes=batch.A, rounds=rounds,
+                      merged=lane_off is not None)
+        Ep, A = batch.E, batch.A
+        # Per-lane event indices and clocks: every lane of an unmerged row
+        # shares the row's event; a merged row's lanes keep their source
+        # event's index/clock so staleness and mix ages stay bit-exact
+        # against the unmerged replay.  Padded rows are skipped wholesale
+        # by the scan body's cond (workers[0] < 0), so their values are
+        # never read.
+        if lane_off is None:
+            ks = np.broadcast_to(
+                np.arange(rounds, rounds + Ep, dtype=np.int32)[:, None],
+                (Ep, A))
+            ts = np.broadcast_to(batch.times[:, None], (Ep, A))
+        else:
+            ks = np.zeros((Ep, A), dtype=np.int32)
+            ks[:E] = rounds + lane_off
+            ts = np.zeros((Ep, A))
+            ts[:E] = lane_ts
+        fin = batch.finish if batch.finish is not None else ts
+        with jax.profiler.TraceAnnotation("dispatch:sparse_scan"):
+            # casts happen host-side: a cross-dtype jnp.asarray would pay a
+            # per-block convert_element_type dispatch
+            (self.W, self.S, self.y, self._ptr,
+             self._metrics) = self._sparse(
+                *args[:4], self._metrics, self._pools, *args[4:],
+                jnp.asarray(np.asarray(ts, dtype=np.float32)),
+                jnp.asarray(np.asarray(fin, dtype=np.float32)),
+                jnp.asarray(ks),
+                jnp.asarray(np.asarray(batch.param_copies_sent,
+                                       dtype=np.int32)),
+            )
 
     def _events_per_step(self, A: int) -> int:
         """Events merged per scan step at lane width ``A`` (the blocking K).
@@ -421,6 +528,8 @@ class DecentralizedTrainer:
             return
         merged, lane_off = merge_event_groups(batch, K)
         g_cap = max(1, cap // K)
+        # telemetry: lane-level source-event clocks, gathered once per chunk
+        lane_ts = batch.times[lane_off] if self.telemetry else None
         start = 0
         while start < merged.E:
             stop = min(merged.E, start + g_cap)
@@ -428,7 +537,8 @@ class DecentralizedTrainer:
             # so ``rounds`` stays the chunk base across slices.
             self._dispatch_sparse_block(
                 merged.slice(start, stop), rounds, g_cap,
-                lane_off=lane_off[start:stop])
+                lane_off=lane_off[start:stop],
+                lane_ts=None if lane_ts is None else lane_ts[start:stop])
             start = stop
 
     # Base chunk length for the narrowest bucket of a multi-bucket ladder.
@@ -477,7 +587,59 @@ class DecentralizedTrainer:
         """
         for b, off, seg in bucketed.segment_batches():
             cap = self._bucket_cap(bucketed.buckets, b, target)
+            self._log.log("bucket_segment", A=int(bucketed.buckets[b]),
+                          events=seg.E, rounds=rounds + off)
             self._dispatch_sparse_chunk(seg, rounds + off, cap)
+
+    def _accum_occupancy(self, rows: List[Dict[str, float]]) -> None:
+        """Fold one chunk's per-rung packing stats into the run aggregate."""
+        if self._bucket_occ is None:
+            self._bucket_occ = {}
+        for r in rows:
+            if not r["events"]:
+                continue
+            acc = self._bucket_occ.setdefault(int(r["A"]),
+                                              {"events": 0, "lanes": 0.0})
+            acc["events"] += int(r["events"])
+            acc["lanes"] += float(r["lane_fill"]) * r["events"] * r["A"]
+
+    def _telemetry_summary(self, t_end: float) -> Optional[Dict]:
+        """Drain the device counters once (logged before ``run_end``)."""
+        if not self.telemetry or self._metrics is None:
+            return None
+        if self._fused_payload:
+            # fold the whole fused run's streamed event identities in one
+            # compiled call (event indices restart at 0 with the per-run
+            # counter reset, so k0 = 0)
+            t_ev, i_seq, p_seq, t_raw = (
+                jnp.concatenate(xs) if len(xs) > 1 else xs[0]
+                for xs in zip(*self._fused_payload))
+            self._metrics = self._fused_fold(
+                self._metrics, i_seq, p_seq, t_raw, t_ev,
+                int(self.scheduler.fused_spec()["copies_pair"]),
+                jnp.int32(0))
+            self._fused_payload = []
+        summary = metrics_summary(
+            self._metrics, t_end,
+            n_minus_1_bound=self.scheduler.name == "dsgd_aau")
+        summary["comm_bytes_per_copy"] = self.param_count * self.dtype.itemsize
+        if self._bucket_occ:
+            summary["bucket_occupancy"] = [
+                {"A": A, "events": acc["events"],
+                 "lane_fill": acc["lanes"] / (acc["events"] * A)}
+                for A, acc in sorted(self._bucket_occ.items())]
+        bound = summary.get("staleness_bound")
+        if bound is not None:
+            self._log.log("staleness_bound", **bound)
+            if not bound["ok"]:
+                self._log.warn_once(
+                    "staleness_bound",
+                    f"DSGD-AAU staleness monitor: observed max staleness "
+                    f"{bound['observed_max']} exceeds the 2N-4 bound "
+                    f"({bound['bound']}) induced by the B <= N-1 per-epoch "
+                    "commit bound — the scheduler violated the paper's "
+                    "bounded-staleness guarantee.")
+        return summary
 
     def warmup(self) -> None:
         """Compile this trainer's update and eval with no-op dispatches.
@@ -501,13 +663,17 @@ class DecentralizedTrainer:
             # untouched.
             E = self.block_size
             zeros = jnp.zeros((E,), dtype=jnp.float32)
-            carry, t_seq = self._fused(
-                jax.tree.map(jnp.array, self.W),
-                jax.tree.map(jnp.array, self.S),
-                jnp.array(self.y), jnp.array(self._ptr), self._pools,
-                jnp.ones((n,), dtype=jnp.float32), jnp.float32(0.0),
+            clones = (jax.tree.map(jnp.array, self.W),
+                      jax.tree.map(jnp.array, self.S),
+                      jnp.array(self.y), jnp.array(self._ptr))
+            clock = (jnp.ones((n,), dtype=jnp.float32), jnp.float32(0.0))
+            carry, ys = self._fused(
+                *clones, self._pools, *clock,
                 jnp.int32(0), zeros, zeros, zeros,
             )
+            # warmup's streamed payload is discarded (telemetry widens the
+            # scan outputs; the block signature is otherwise identical)
+            t_seq = ys[0] if self.telemetry else ys
             carry[2].block_until_ready()
             self._warm_eval()
             # Also warm the per-eval recording ops (row build + history
@@ -575,6 +741,24 @@ class DecentralizedTrainer:
         eval_every: int = 10,
     ) -> RunResult:
         assert max_events or max_time, "bound the run by events or virtual time"
+        if self.telemetry:
+            # fresh counters per run: event indices (the staleness clock)
+            # restart at 0 every run, so carried-over restart marks from a
+            # previous run would alias as negative staleness
+            self._metrics = self._init_metrics(self.n)
+            self._bucket_occ = {}
+            self._fused_payload = []
+        self._log.log("run_start", algorithm=self.scheduler.name, n=self.n,
+                      mode=self.mode, max_events=max_events,
+                      max_time=max_time, eval_every=eval_every,
+                      dtype=str(self.dtype), telemetry=self.telemetry)
+        if self.mode == "fused" or getattr(self.scheduler, "horizon", None):
+            self._log.warn_once(
+                "rng_order",
+                "event stream is a different-but-deterministic RNG-order "
+                "realization (horizon batching / fused generation): "
+                "distributionally identical to the exact per-event stream, "
+                "not bit-identical to it.", warn=False)
         if self.mode == "fused":
             return self._run_fused(max_events, max_time, eval_every)
         if self.mode == "sparse_scan":
@@ -601,12 +785,25 @@ class DecentralizedTrainer:
             active_sizes.append(ev.n_active)
             eta = jnp.float32(
                 self.eta0 * (self.eta_decay ** (rounds // self.eta_decay_every)))
+            P_dev = jnp.asarray(ev.P, dtype=jnp.float32)
+            gm_dev = jnp.asarray(ev.grad_workers)
+            rm_dev = jnp.asarray(ev.restart_workers)
             self.W, self.S, self.y = self._step(
                 self.W, self.S, self.y, self._batches,
-                jnp.asarray(ev.P, dtype=jnp.float32),
-                jnp.asarray(ev.grad_workers), jnp.asarray(ev.restart_workers),
-                eta,
+                P_dev, gm_dev, rm_dev, eta,
             )
+            if self.telemetry:
+                # same per-event quantities the scan paths pack: per-lane
+                # raw completion clocks scattered over the event-time base
+                fin = np.full(self.n, ev.time)
+                if ev.finish_lanes is not None and len(ev.workers):
+                    fin[ev.workers] = ev.finish_lanes
+                self._metrics = self._metrics_step(
+                    self._metrics, P_dev, gm_dev, rm_dev,
+                    jnp.float32(ev.time),
+                    jnp.asarray(fin, dtype=jnp.float32),
+                    jnp.int32(rounds),
+                    jnp.int32(ev.param_copies_sent))
             self._refresh_batches(ev.workers[ev.restart_lanes])
             rounds += 1
             if rounds % eval_every == 0:
@@ -678,7 +875,8 @@ class DecentralizedTrainer:
         # host-side max: keeps this off the compile cache (a jnp.max here
         # would be the run's only reduce op — one more first-run compile)
         if rounds and int(np.max(jax.device_get(self._ptr))) > self._pool_len:
-            warnings.warn(
+            self._log.warn_once(
+                "pool_wrap",
                 f"batch pool of {self._pool_len} draws/worker wrapped "
                 f"(max restarts {int(jnp.max(self._ptr))}): samples were "
                 "revisited cyclically; raise batch_pool (or bound the run "
@@ -734,8 +932,15 @@ class DecentralizedTrainer:
             t = float(tms[-1])
             k = rounds + chunk.E - 1
             if isinstance(chunk, BucketedSparseEventBatch):
+                if self.telemetry:
+                    self._accum_occupancy(chunk.occupancy())
                 self._dispatch_bucketed(chunk, rounds, target)
             else:
+                if self.telemetry:
+                    self._accum_occupancy([{
+                        "A": int(chunk.A), "events": int(chunk.E),
+                        "lane_fill": float(chunk.n_workers.sum())
+                        / max(chunk.E * chunk.A, 1)}])
                 self._dispatch_sparse_chunk(chunk, rounds, target)
             rounds += chunk.E
             if rounds % eval_every == 0:
@@ -750,14 +955,19 @@ class DecentralizedTrainer:
     def _ensure_fused(self, max_events: Optional[int] = None):
         if self._fused is None:
             from repro.core.fused import build_fused_pair_scan
+            self._log.log("compile", key="fused", telemetry=self.telemetry)
             self._fused = build_fused_pair_scan(
                 self.loss_fn, self.scheduler.fused_spec(),
-                use_kernel=self.use_kernel)
+                use_kernel=self.use_kernel, telemetry=self.telemetry)
             # Same aliasing hazard as _ensure_sparse: the fused block
             # donates both W and S.
             if any(w is s for w, s in zip(jax.tree.leaves(self.W),
                                           jax.tree.leaves(self.S))):
                 self.S = jax.tree.map(jnp.array, self.S)
+            if self.telemetry:
+                self._fused_fold = jax.jit(fused_metrics_fold,
+                                           static_argnums=(5,))
+        self._ensure_metrics()
         self._ensure_pools(max_events)
 
     def _run_fused(self, max_events, max_time, eval_every) -> RunResult:
@@ -802,13 +1012,25 @@ class DecentralizedTrainer:
             # convert_element_type op (a first-run compile); a same-dtype
             # asarray is a pure device put
             etas = np.asarray(self._etas_for(E, E, rounds), dtype=np.float32)
-            (self.W, self.S, self.y, self._ptr, times, lock_free,
-             comm_dev), t_seq = self._fused(
-                self.W, self.S, self.y, self._ptr, self._pools,
-                times, lock_free, comm_dev,
-                jnp.asarray(factors, dtype=jnp.float32),
-                jnp.asarray(picks, dtype=jnp.float32),
-                jnp.asarray(etas, dtype=jnp.float32))
+            xs = (jnp.asarray(factors, dtype=jnp.float32),
+                  jnp.asarray(picks, dtype=jnp.float32),
+                  jnp.asarray(etas, dtype=jnp.float32))
+            if self.telemetry:
+                self._log.log("block_dispatch", mode="fused", events=E,
+                              rounds=rounds)
+            with jax.profiler.TraceAnnotation("dispatch:fused"):
+                (self.W, self.S, self.y, self._ptr, times, lock_free,
+                 comm_dev), ys = self._fused(
+                    self.W, self.S, self.y, self._ptr, self._pools,
+                    times, lock_free, comm_dev, *xs)
+            if self.telemetry:
+                # buffer the block's (t_ev, i, p, t_raw) event stream on
+                # device — folded once at drain (fused_metrics_fold), so
+                # telemetry adds no in-loop work beyond the scan outputs
+                self._fused_payload.append(ys)
+                t_seq = ys[0]
+            else:
+                t_seq = ys
             rounds += E
             if rounds % eval_every == 0 or rounds >= max_events:
                 eval_buf = self._fused_record(
@@ -836,12 +1058,18 @@ class DecentralizedTrainer:
                 comm_param_copies=comm_i,
                 n_active_mean=(E_i + min(pairs, E_i)) / max(E_i, 1)))
             prev_comm, prev_rounds = comm_i, mr
+        t_end = history[-1].time
+        tel = self._telemetry_summary(t_end)
+        self._log.log("run_end", rounds=rounds, t=t_end,
+                      comm=history[-1].comm_param_copies)
         return RunResult(
             algorithm=sched.name, history=history,
             final_loss=history[-1].loss, final_metric=history[-1].metric,
-            total_events=rounds, total_time=history[-1].time,
+            total_events=rounds, total_time=t_end,
             total_comm_copies=history[-1].comm_param_copies,
             param_count=self.param_count,
+            bytes_per_scalar=self.dtype.itemsize,
+            telemetry=tel,
         )
 
     def _fused_record(self, eval_buf: jax.Array, i: int, t_last: jax.Array,
@@ -890,11 +1118,15 @@ class DecentralizedTrainer:
                          metric=float(vals[i, 1]), comm_param_copies=mc,
                          n_active_mean=ma)
             for i, (mk, mt, mc, ma) in enumerate(meta)]
+        tel = self._telemetry_summary(t)
+        self._log.log("run_end", rounds=rounds, t=t, comm=comm)
         return RunResult(
             algorithm=self.scheduler.name, history=history,
             final_loss=history[-1].loss, final_metric=history[-1].metric,
             total_events=rounds, total_time=t, total_comm_copies=comm,
             param_count=self.param_count,
+            bytes_per_scalar=self.dtype.itemsize,
+            telemetry=tel,
         )
 
     def _finish(self, history, k, t, comm, rounds, active_sizes) -> RunResult:
@@ -902,11 +1134,15 @@ class DecentralizedTrainer:
         history.append(HistoryPoint(
             k=k, time=t, loss=loss, metric=metric, comm_param_copies=comm,
             n_active_mean=float(np.mean(active_sizes)) if active_sizes else 0.0))
+        tel = self._telemetry_summary(t)
+        self._log.log("run_end", rounds=rounds, t=t, comm=comm)
         return RunResult(
             algorithm=self.scheduler.name, history=history,
             final_loss=loss, final_metric=metric,
             total_events=rounds, total_time=t, total_comm_copies=comm,
             param_count=self.param_count,
+            bytes_per_scalar=self.dtype.itemsize,
+            telemetry=tel,
         )
 
     def _eval_now(self):

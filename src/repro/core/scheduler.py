@@ -87,7 +87,7 @@ class ScheduleEvent:
 
     __slots__ = ("k", "time", "n", "workers", "P_sub", "grad_lanes",
                  "restart_lanes", "edges", "param_copies_sent",
-                 "_P", "_gw", "_rw", "_ae")
+                 "finish_lanes", "_P", "_gw", "_rw", "_ae")
 
     def __init__(self, k: int, time: float, n: int, workers: np.ndarray,
                  P_sub: np.ndarray, grad_lanes: np.ndarray,
@@ -95,7 +95,8 @@ class ScheduleEvent:
                  param_copies_sent: int,
                  dense_P: Optional[np.ndarray] = None,
                  dense_grad: Optional[np.ndarray] = None,
-                 dense_restart: Optional[np.ndarray] = None):
+                 dense_restart: Optional[np.ndarray] = None,
+                 finish_lanes: Optional[np.ndarray] = None):
         self.k = k
         self.time = time
         self.n = n
@@ -105,6 +106,12 @@ class ScheduleEvent:
         self.restart_lanes = restart_lanes
         self.edges = edges
         self.param_copies_sent = param_copies_sent
+        # per-lane raw local-computation completion clocks, aligned with
+        # ``workers`` — the event fires at ``time`` ≥ every lane's finish
+        # (clique formation / averaging locks impose the wait); telemetry
+        # splits busy vs idle virtual time on that gap.  None ⇒ every lane
+        # finished exactly at ``time``.
+        self.finish_lanes = finish_lanes
         self._P = dense_P
         self._gw = dense_grad
         self._rw = dense_restart
@@ -262,6 +269,10 @@ class EventBatch:
     param_copies_sent: np.ndarray   # (E,) int64
     edges: np.ndarray               # (E, edge_bound, 2) int32, -1-padded
     n_edges: np.ndarray             # (E,) int32 valid rows of ``edges``
+    finish: Optional[np.ndarray] = None  # (E, n) float64 raw completion
+    #   clocks (= times broadcast for non-active workers); None when the
+    #   source events carried no finish_lanes (telemetry then treats every
+    #   restart as finishing at the event clock)
 
     @property
     def E(self) -> int:
@@ -291,6 +302,9 @@ class EventBatch:
         P = np.broadcast_to(np.eye(n, dtype=np.float32), (E, n, n)).copy()
         gm = np.zeros((E, n), dtype=bool)
         rm = np.zeros((E, n), dtype=bool)
+        times = np.fromiter((ev.time for ev in events),
+                            dtype=np.float64, count=E)
+        finish = np.repeat(times[:, None], n, axis=1)
         if flatw.size:
             bi, _, _, gr, gc = _worker_scatter_indices(wlens, flatw)
             P[bi, gr, gc] = np.concatenate(
@@ -300,15 +314,18 @@ class EventBatch:
                 [ev.grad_lanes for ev in events if len(ev.workers)])
             rm[rows, flatw] = np.concatenate(
                 [ev.restart_lanes for ev in events if len(ev.workers)])
+            finish[rows, flatw] = np.concatenate([
+                (ev.finish_lanes if ev.finish_lanes is not None
+                 else np.full(len(ev.workers), ev.time))
+                for ev in events if len(ev.workers)])
         return cls(
             k0=events[0].k,
-            times=np.fromiter((ev.time for ev in events),
-                              dtype=np.float64, count=E),
+            times=times,
             P=P, grad_workers=gm, restart_workers=rm,
             param_copies_sent=np.fromiter(
                 (ev.param_copies_sent for ev in events),
                 dtype=np.int64, count=E),
-            edges=edges, n_edges=n_edges,
+            edges=edges, n_edges=n_edges, finish=finish,
         )
 
     def pad_to(self, E: int) -> "EventBatch":
@@ -341,6 +358,9 @@ class EventBatch:
                 np.full((pad,) + self.edges.shape[1:], -1, dtype=np.int32)]),
             n_edges=np.concatenate(
                 [self.n_edges, np.zeros(pad, dtype=np.int32)]),
+            finish=(np.concatenate(
+                [self.finish, np.full((pad, n), self.times[-1])])
+                if self.finish is not None else None),
         )
 
     def to_events(self) -> List[ScheduleEvent]:
@@ -398,6 +418,9 @@ class SparseEventBatch:
     param_copies_sent: np.ndarray   # (E,) int64
     edges: np.ndarray               # (E, edge_bound, 2) int32, -1-padded
     n_edges: np.ndarray             # (E,) int32 valid rows of ``edges``
+    finish: Optional[np.ndarray] = None  # (E, A) float64 per-lane raw
+    #   completion clocks (= times broadcast on pad lanes); None when the
+    #   source events carried no finish_lanes
 
     @property
     def E(self) -> int:
@@ -429,6 +452,9 @@ class SparseEventBatch:
         P_sub = np.zeros((E, A, A), dtype=np.float32)
         gm = np.zeros((E, A), dtype=bool)
         rm = np.zeros((E, A), dtype=bool)
+        times = np.fromiter((ev.time for ev in events),
+                            dtype=np.float64, count=E)
+        finish = np.repeat(times[:, None], A, axis=1)
         if int(wlens.sum()):
             nonempty = [ev for ev in events if len(ev.workers)]
             flatw = np.concatenate([ev.workers for ev in nonempty])
@@ -439,20 +465,23 @@ class SparseEventBatch:
                 [ev.grad_lanes for ev in nonempty])
             rm[rows, cols] = np.concatenate(
                 [ev.restart_lanes for ev in nonempty])
+            finish[rows, cols] = np.concatenate([
+                (ev.finish_lanes if ev.finish_lanes is not None
+                 else np.full(len(ev.workers), ev.time))
+                for ev in nonempty])
             bi, lr, lc, _, _ = _worker_scatter_indices(wlens, flatw)
             P_sub[bi, lr, lc] = np.concatenate(
                 [ev.P_sub.ravel() for ev in nonempty])
         edges, n_edges = _pack_edges(events, edge_bound)
         return cls(
             k0=events[0].k,
-            times=np.fromiter((ev.time for ev in events),
-                              dtype=np.float64, count=E),
+            times=times,
             workers=workers, n_workers=wlens.astype(np.int32), P_sub=P_sub,
             grad_workers=gm, restart_workers=rm,
             param_copies_sent=np.fromiter(
                 (ev.param_copies_sent for ev in events),
                 dtype=np.int64, count=E),
-            edges=edges, n_edges=n_edges,
+            edges=edges, n_edges=n_edges, finish=finish,
         )
 
     def pad_to(self, E: int) -> "SparseEventBatch":
@@ -487,6 +516,9 @@ class SparseEventBatch:
                 np.full((pad,) + self.edges.shape[1:], -1, dtype=np.int32)]),
             n_edges=np.concatenate(
                 [self.n_edges, np.zeros(pad, dtype=np.int32)]),
+            finish=(np.concatenate(
+                [self.finish, np.full((pad, A), self.times[-1])])
+                if self.finish is not None else None),
         )
 
     def slice(self, start: int, stop: int) -> "SparseEventBatch":
@@ -511,6 +543,8 @@ class SparseEventBatch:
             param_copies_sent=self.param_copies_sent[start:stop],
             edges=self.edges[start:stop],
             n_edges=self.n_edges[start:stop],
+            finish=(self.finish[start:stop]
+                    if self.finish is not None else None),
         )
 
     def head(self, j: int) -> "SparseEventBatch":
@@ -553,6 +587,8 @@ class SparseEventBatch:
                 restart_lanes=self.restart_workers[e, :m],
                 edges=self.edges[e, :me],
                 param_copies_sent=int(self.param_copies_sent[e]),
+                finish_lanes=(self.finish[e, :m]
+                              if self.finish is not None else None),
             ))
         return out
 
@@ -623,6 +659,7 @@ def merge_event_groups(batch: SparseEventBatch,
     edges = np.full((G, ew_m, 2), -1, dtype=np.int32)
     n_edges = np.zeros(G, dtype=np.int32)
     times = np.empty(G, dtype=np.float64)
+    finish = np.zeros((G, AK), dtype=np.float64)
     copies = np.zeros(G, dtype=np.int64)
     for gi, (s, c) in enumerate(groups):
         o = 0
@@ -632,6 +669,9 @@ def merge_event_groups(batch: SparseEventBatch,
             P_sub[gi, o:o + m, o:o + m] = batch.P_sub[s + j, :m, :m]
             gm[gi, o:o + m] = batch.grad_workers[s + j, :m]
             rm[gi, o:o + m] = batch.restart_workers[s + j, :m]
+            finish[gi, o:o + m] = (batch.finish[s + j, :m]
+                                   if batch.finish is not None
+                                   else batch.times[s + j])
             lane_off[gi, o:o + m] = s + j
             o += m
             ne = int(batch.n_edges[s + j])
@@ -645,7 +685,8 @@ def merge_event_groups(batch: SparseEventBatch,
         k0=batch.k0, times=times, workers=workers,
         n_workers=(workers >= 0).sum(axis=1).astype(np.int32),
         P_sub=P_sub, grad_workers=gm, restart_workers=rm,
-        param_copies_sent=copies, edges=edges, n_edges=n_edges)
+        param_copies_sent=copies, edges=edges, n_edges=n_edges,
+        finish=finish)
     return merged, lane_off
 
 
@@ -931,10 +972,12 @@ class CliquePackedStream(PackedEventStream):
             n_edges=np.zeros(E, dtype=np.int32),
             times=np.empty(E, dtype=np.float64),
             param_copies_sent=np.zeros(E, dtype=np.int64),
+            finish=np.zeros((E, A), dtype=np.float64),
         )
 
     @staticmethod
-    def _fill(a: dict, row: int, t, widx, P_sub, edges, copies) -> None:
+    def _fill(a: dict, row: int, t, widx, P_sub, edges, copies,
+              finish=None) -> None:
         m = len(widx)
         a["workers"][row, :m] = widx
         a["n_workers"][row] = m
@@ -947,6 +990,9 @@ class CliquePackedStream(PackedEventStream):
         a["n_edges"][row] = e
         a["times"][row] = t
         a["param_copies_sent"][row] = copies
+        a["finish"][row] = t            # pad lanes read the event clock
+        if finish is not None:
+            a["finish"][row, :m] = finish
 
     def _pack_flat(self, buf) -> SparseEventBatch:
         a = self._alloc(len(buf), self.buckets[-1], self._ebound)
@@ -1207,10 +1253,12 @@ class AAUScheduler(Scheduler):
         """The AAU event process as packed-ready tuples.
 
         Single source of truth for the simulation loop: yields
-        ``(t, workers, P_sub, edges, copies)`` per event; :meth:`events`
-        wraps each into a :class:`ScheduleEvent` for the legacy paths and
-        :meth:`_native_packed_stream` feeds them straight into
-        :class:`CliquePackedStream` array fills.
+        ``(t, workers, P_sub, edges, copies, finish)`` per event —
+        ``finish`` the per-lane raw completion clocks (clique members wait
+        for the newest finisher, so ``finish ≤ t`` lane-wise);
+        :meth:`events` wraps each into a :class:`ScheduleEvent` for the
+        legacy paths and :meth:`_native_packed_stream` feeds them straight
+        into :class:`CliquePackedStream` array fills.
         """
         n = self.n
         adj = self.graph.adj
@@ -1220,9 +1268,11 @@ class AAUScheduler(Scheduler):
         for i, dt in enumerate(sample_batch(np.arange(n))):
             heapq.heappush(heap, (dt, i))
         finished = np.zeros(n, dtype=bool)
+        finish_at = np.zeros(n, dtype=np.float64)
         while True:
             t, i = heapq.heappop(heap)
             finished[i] = True
+            finish_at[i] = t
             if n > 1:
                 # One O(deg) neighborhood scan per worker finish instead of
                 # an O(|finished|²) rescan: between commits the component
@@ -1244,7 +1294,7 @@ class AAUScheduler(Scheduler):
             edges = np.stack([widx[er], widx[ec]], axis=1) if er.size \
                 else _EMPTY_EDGES
             yield (t, widx, metropolis_submatrix(n, widx, sub_adj),
-                   edges, 2 * len(edges))
+                   edges, 2 * len(edges), finish_at[widx].copy())
             # batch-draw the restarted workers' next completion times: one
             # vectorized RNG call instead of one heap-push-sized draw each
             fl = fin.tolist()
@@ -1256,13 +1306,14 @@ class AAUScheduler(Scheduler):
 
     def events(self) -> Iterator[ScheduleEvent]:
         n = self.n
-        for k, (t, widx, P_sub, edges, copies) in \
+        for k, (t, widx, P_sub, edges, copies, fin) in \
                 enumerate(self._clique_tuples()):
             lanes = np.ones(len(widx), dtype=bool)
             yield ScheduleEvent(
                 k=k, time=t, n=n, workers=widx, P_sub=P_sub,
                 grad_lanes=lanes, restart_lanes=lanes,
                 edges=edges, param_copies_sent=copies,
+                finish_lanes=fin,
             )
 
     def _native_packed_stream(self) -> Optional[PackedEventStream]:
@@ -1292,7 +1343,9 @@ class SyncScheduler(Scheduler):
         t = 0.0
         k = 0
         while True:
-            t += float(self.sampler.sample_all().max())  # barrier: slowest worker
+            dur = self.sampler.sample_all()  # one draw, as before
+            fin = t + dur                    # per-worker completion clocks
+            t += float(dur.max())            # barrier: slowest worker
             # independent mask copies per role (a consumer mutating one view
             # must not flip the other); P is shared across events as before
             gl = np.ones(n, dtype=bool)
@@ -1302,6 +1355,7 @@ class SyncScheduler(Scheduler):
                 grad_lanes=gl, restart_lanes=rl, edges=edges,
                 param_copies_sent=2 * len(edge_list),
                 dense_P=P, dense_grad=gl, dense_restart=rl,
+                finish_lanes=fin,
             )
             k += 1
 
@@ -1315,8 +1369,10 @@ class SyncScheduler(Scheduler):
         copies = 2 * len(edge_list)
         t = 0.0
         while True:
-            t += float(self.sampler.sample_all().max())
-            yield (t, workers, P, edges, copies)
+            dur = self.sampler.sample_all()
+            fin = t + dur
+            t += float(dur.max())
+            yield (t, workers, P, edges, copies, fin)
 
     def _native_packed_stream(self) -> Optional[PackedEventStream]:
         # The runner never routes the barrier stream through the sparse

@@ -53,8 +53,9 @@ def gossip_mix(W: jax.Array, P: jax.Array, *, block_d: int = 512,
     if Np != N:
         flat = jnp.pad(flat, ((0, Np - N), (0, 0)))
         P = _pad_P_identity(P, N, Np)
-    out = gossip_mix_pallas(flat, P.astype(flat.dtype), block_d=block_d,
-                            interpret=interpret)
+    with jax.named_scope("gossip_mix"):
+        out = gossip_mix_pallas(flat, P.astype(flat.dtype), block_d=block_d,
+                                interpret=interpret)
     return out[:N, :D].reshape(orig_shape)
 
 
@@ -86,8 +87,9 @@ def masked_gossip_mix(W: jax.Array, G: jax.Array, P: jax.Array,
         scaled_mask = jnp.pad(scaled_mask, (0, Np - N))
     P = P.astype(flat_w.dtype)
     Q = scaled_mask.astype(flat_w.dtype)[:, None] * P
-    out = masked_gossip_pallas(flat_w, flat_g, P, Q, block_d=block_d,
-                               interpret=interpret)
+    with jax.named_scope("masked_gossip_mix"):
+        out = masked_gossip_pallas(flat_w, flat_g, P, Q, block_d=block_d,
+                                   interpret=interpret)
     return out[:N, :D].reshape(orig_shape)
 
 
@@ -109,6 +111,7 @@ def gossip_mix_batched(W: jax.Array, P: jax.Array, *, block_d: int = 512,
         flat = jnp.pad(flat, ((0, 0), (0, Np - N), (0, 0)))
         P = jnp.pad(P, ((0, 0), (0, Np - N), (0, Np - N)))
         P = P.at[:, jnp.arange(N, Np), jnp.arange(N, Np)].set(1.0)
-    out = gossip_mix_batched_pallas(flat, P.astype(flat.dtype),
-                                    block_d=block_d, interpret=interpret)
+    with jax.named_scope("gossip_mix_batched"):
+        out = gossip_mix_batched_pallas(flat, P.astype(flat.dtype),
+                                        block_d=block_d, interpret=interpret)
     return out[:, :N, :D].reshape(orig_shape)

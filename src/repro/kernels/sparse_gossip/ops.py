@@ -71,9 +71,10 @@ def sparse_gossip_rows(W: jax.Array, G: jax.Array, P_sub: jax.Array,
         P = jnp.pad(P, ((0, Ap - A), (0, Ap - A)))
         Q = jnp.pad(Q, ((0, Ap - A), (0, Ap - A)))
         gidx = jnp.pad(gidx, (0, Ap - A))  # clamped lanes with zero P/Q rows
-    out = sparse_gossip_pallas(flat_w, flat_g, P.astype(flat_w.dtype),
-                               Q.astype(flat_w.dtype), gidx,
-                               block_d=block_d, interpret=interpret)
+    with jax.named_scope("sparse_gossip"):
+        out = sparse_gossip_pallas(flat_w, flat_g, P.astype(flat_w.dtype),
+                                   Q.astype(flat_w.dtype), gidx,
+                                   block_d=block_d, interpret=interpret)
     return out[:A, :D].reshape((A,) + W.shape[1:])
 
 
@@ -130,6 +131,7 @@ def sparse_scatter_rows(X: jax.Array, rows: jax.Array, workers: jax.Array, *,
     if Ap != A:
         flat_r = jnp.pad(flat_r, ((0, Ap - A), (0, 0)))
         idx = jnp.pad(idx, (0, Ap - A), constant_values=-1)
-    out = scatter_rows_pallas(flat_x, flat_r, idx, block_d=block_d,
-                              interpret=interpret)
+    with jax.named_scope("sparse_scatter_rows"):
+        out = scatter_rows_pallas(flat_x, flat_r, idx, block_d=block_d,
+                                  interpret=interpret)
     return out[:, :D].reshape(X.shape)

@@ -1,0 +1,29 @@
+"""Observability: device-resident telemetry + structured run logging.
+
+``repro.obs`` is the measurement layer the paper's argument needs at
+runtime — per-worker staleness (Pathsearch's B ≤ N−1 bound, Remark 4),
+gossip participation, busy/idle virtual time, and dtype-aware
+communication accounting — implemented as a :class:`MetricsCarry` of
+device accumulator arrays that rides the ``(W, S, y, ptr)`` scan carries
+of every execution mode and is drained to host once per run (never per
+event: after PR 7 fused generation and consumption into one compiled
+scan, any per-event host sync would reintroduce the dispatch overhead
+PRs 3–7 removed).
+
+Around the device core, :class:`RunLogger` writes structured JSONL run
+logs (block dispatches, bucket-rung choices, compile events, pool-wrap
+warnings) replacing bare ``warnings.warn``, and ``jax.named_scope``
+annotations on the kernels and update bodies make ``--profile`` traces
+legible.
+"""
+from repro.obs.metrics import (MetricsCarry, block_metrics_update,
+                               dense_metrics_update, fused_metrics_fold,
+                               init_metrics, metrics_summary,
+                               sparse_metrics_update)
+from repro.obs.runlog import RunLogger
+
+__all__ = [
+    "MetricsCarry", "RunLogger", "block_metrics_update",
+    "dense_metrics_update", "fused_metrics_fold", "init_metrics",
+    "metrics_summary", "sparse_metrics_update",
+]

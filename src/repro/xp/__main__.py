@@ -39,6 +39,11 @@ def main(argv=None) -> int:
                     help="worker-state dtype policy: float32 | bfloat16")
     ap.add_argument("--max-time", type=float, default=None,
                     help="override the async virtual-time budget")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="record device-resident per-worker telemetry "
+                         "(repro.obs) into the artifact's telemetry section")
+    ap.add_argument("--run-log", default=None,
+                    help="append structured JSONL run events here")
     args = ap.parse_args(argv)
 
     spec = get_preset("smoke" if args.smoke else args.preset)
@@ -56,6 +61,10 @@ def main(argv=None) -> int:
         # the preset carries (event bounds take precedence in the sweep)
         over["max_time"] = args.max_time
         over["max_events"] = None
+    if args.telemetry:
+        over["telemetry"] = True
+    if args.run_log:
+        over["run_log"] = args.run_log
     if over:
         spec = spec.replace(**over)
 

@@ -13,8 +13,20 @@ The JSON artifact schema (consumed by experiments/render_tables.py):
                                 metric_mean}]} ],
   "dtype_policy":  [ {dtype, scenario, algorithm, n, events, final_loss,
                       final_metric, wall_s, events_per_s} ],
+  "telemetry":     [ {scenario, n, algorithm, n_seeds, utilization_mean,
+                      utilization_min, stale_mean, stale_max,
+                      stale_hist: [16 log2-binned counts], comm_copies,
+                      grad_steps_total,
+                      staleness_bound?: {bound, observed_max, ok},
+                      bucket_occupancy?: [{A, events, lane_fill}]} ],
 }
 ```
+
+The ``telemetry`` section is present only when the spec ran with
+``telemetry=True`` (device-resident counters drained once per run — see
+repro/obs); ``staleness_bound`` appears for DSGD-AAU rows (the 2N−4
+event-staleness monitor induced by the B ≤ N−1 per-epoch commit bound)
+and ``bucket_occupancy`` for bucketed sparse streams.
 
 ``speedup_mean`` is NaN (serialized as the JSON string "nan") whenever a
 run never reached the target loss inside its budget — the ``unreached``
@@ -30,7 +42,8 @@ from typing import Dict, List
 
 import jax
 
-from repro.xp.sweep import SweepResult, convergence_rows, speedup_rows
+from repro.xp.sweep import (SweepResult, convergence_rows, speedup_rows,
+                            telemetry_rows)
 
 
 def _json_safe(obj):
@@ -55,7 +68,7 @@ def parse_float(v) -> float:
 
 
 def artifact_payload(sweep: SweepResult) -> Dict[str, object]:
-    return {
+    payload = {
         "meta": {
             "spec": sweep.spec.to_dict(),
             "jax": jax.__version__,
@@ -66,6 +79,10 @@ def artifact_payload(sweep: SweepResult) -> Dict[str, object]:
         "convergence": convergence_rows(sweep),
         "dtype_policy": sweep.dtype_rows,
     }
+    rows = telemetry_rows(sweep)
+    if rows:  # present only for telemetry=True runs (see module docstring)
+        payload["telemetry"] = rows
+    return payload
 
 
 def write_artifact(path: str, payload: Dict[str, object]) -> None:
@@ -107,4 +124,14 @@ def csv_rows(payload: Dict[str, object]) -> List[str]:
             f"paper_figures/dtype/{r['dtype']}/{r['algorithm']}/N{r['n']},"
             f"0.0,final_loss={parse_float(r['final_loss']):.4f};"
             f"events_per_s={parse_float(r['events_per_s']):.1f}")
+    for r in payload.get("telemetry", []):
+        derived = (f"util={parse_float(r['utilization_mean']):.3f};"
+                   f"stale_mean={parse_float(r['stale_mean']):.2f};"
+                   f"stale_max={r['stale_max']}")
+        b = r.get("staleness_bound")
+        if b is not None:
+            derived += (f";bound={b['bound']};"
+                        f"bound_ok={'yes' if b['ok'] else 'VIOLATED'}")
+        out.append(f"paper_figures/telemetry/{r['scenario']}/N{r['n']}/"
+                   f"{r['algorithm']},0.0,{derived}")
     return out

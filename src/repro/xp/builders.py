@@ -110,4 +110,5 @@ def build_trainer(spec: ExperimentSpec, alg: str, n: int, seed: int,
         eta0=spec.eta0, eta_decay=spec.eta_decay, seed=seed,
         mode=spec.mode, block_size=spec.block_size,
         batch_pool=batch_pool if batch_pool is not None else spec.batch_pool,
-        dtype=dtype or spec.dtype)
+        dtype=dtype or spec.dtype,
+        telemetry=spec.telemetry, run_log=spec.run_log)

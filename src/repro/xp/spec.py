@@ -48,6 +48,9 @@ class ExperimentSpec:
     batch_pool: Optional[int] = None     # None → derived from the budget
     group_size: int = 4                  # prague
     horizon: Optional[int] = None        # single-edge event-horizon batching
+    telemetry: bool = False              # device-resident per-worker counters
+                                         # (repro.obs) recorded per cell
+    run_log: Optional[str] = None        # JSONL structured run-log path
 
     # budgets
     max_events: Optional[int] = None

@@ -236,6 +236,66 @@ def speedup_rows(sweep: SweepResult) -> List[Dict[str, object]]:
     return rows
 
 
+def telemetry_rows(sweep: SweepResult) -> List[Dict[str, object]]:
+    """Per (scenario, n, algorithm): drained device-telemetry summary.
+
+    Only populated when the spec ran with ``telemetry=True`` (each
+    ``RunResult.telemetry`` carries ``repro.obs.metrics.metrics_summary``).
+    Seed-aggregated: utilization and staleness means average across seeds,
+    the staleness histogram and comm totals sum, and the DSGD-AAU
+    ``staleness_bound`` monitor reports the worst seed.
+    """
+    spec = sweep.spec
+    rows: List[Dict[str, object]] = []
+    algs = ((spec.reference,) if spec.reference else ()) + spec.algorithms
+    for scen, n in sweep.cells():
+        for alg in algs:
+            tels = [r.result.telemetry for r in sweep.select(scen, alg, n)
+                    if r.result.telemetry is not None]
+            if not tels:
+                continue
+            hist = np.sum([t["stale_hist"] for t in tels], axis=0)
+            row: Dict[str, object] = {
+                "scenario": scen, "n": n, "algorithm": alg,
+                "n_seeds": len(tels),
+                "utilization_mean": round(float(np.mean(
+                    [t["utilization_mean"] for t in tels])), 6),
+                "utilization_min": round(float(np.min(
+                    [min(t["utilization"]) for t in tels])), 6),
+                "stale_mean": round(float(np.mean(
+                    [t["stale_mean"] for t in tels])), 6),
+                "stale_max": int(max(t["stale_max"] for t in tels)),
+                "stale_hist": [int(v) for v in hist],
+                "comm_copies": int(sum(t["comm_copies"] for t in tels)),
+                "grad_steps_total": int(sum(sum(t["grad_steps"])
+                                            for t in tels)),
+            }
+            bounds = [t["staleness_bound"] for t in tels
+                      if t.get("staleness_bound") is not None]
+            if bounds:
+                row["staleness_bound"] = {
+                    "bound": bounds[0]["bound"],
+                    "observed_max": max(b["observed_max"] for b in bounds),
+                    "ok": all(b["ok"] for b in bounds),
+                }
+            occs = [t["bucket_occupancy"] for t in tels
+                    if t.get("bucket_occupancy")]
+            if occs:
+                agg: Dict[int, Dict[str, float]] = {}
+                for occ in occs:
+                    for r_ in occ:
+                        a = agg.setdefault(int(r_["A"]),
+                                           {"events": 0, "lanes": 0.0})
+                        a["events"] += int(r_["events"])
+                        a["lanes"] += r_["lane_fill"] * r_["events"] * r_["A"]
+                row["bucket_occupancy"] = [
+                    {"A": A, "events": a["events"],
+                     "lane_fill": round(a["lanes"] / (a["events"] * A), 6)}
+                    for A, a in sorted(agg.items())]
+            rows.append(row)
+    return rows
+
+
 def convergence_rows(sweep: SweepResult,
                      max_points: int = 80) -> List[Dict[str, object]]:
     """Per (scenario, n, algorithm): loss-vs-virtual-time curve, seed-averaged.
