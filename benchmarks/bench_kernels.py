@@ -37,7 +37,8 @@ def run(paper_scale: bool = False, smoke: bool = False):
         W = jax.random.normal(key, (n, d))
         P = jnp.asarray(metropolis_matrix(
             n, [(i, (i + 1) % n) for i in range(n)]), jnp.float32)
-        ref = jax.jit(gossip_mix_ref)
+        # per-(n, d) jit is deliberate: each config compiles once anyway
+        ref = jax.jit(gossip_mix_ref)  # repro: disable=jit-in-loop
         us = _time(ref, W, P)
         err = float(jnp.max(jnp.abs(gossip_mix(W, P) - ref(W, P))))
         rows.append(csv_row(f"kernel/gossip_mix/N{n}_D{d}", us,
@@ -52,7 +53,7 @@ def run(paper_scale: bool = False, smoke: bool = False):
         P_sub = jnp.full((2, 2), 0.5, jnp.float32)
         mask = jnp.asarray([0.1, 0.0], jnp.float32)
         workers = jnp.asarray([1, n - 1], jnp.int32)
-        ref = jax.jit(sparse_gossip_apply_ref)
+        ref = jax.jit(sparse_gossip_apply_ref)  # repro: disable=jit-in-loop
         us = _time(ref, W, G, P_sub, mask, workers)
         err = float(jnp.max(jnp.abs(
             sparse_gossip_apply(W, G, P_sub, mask, workers)

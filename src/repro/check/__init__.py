@@ -1,0 +1,36 @@
+"""repro.check — invariant lints + runtime sanitizers for the repro codebase.
+
+The static half is a small AST lint engine (:mod:`repro.check.engine`) with
+five repo-specific rule families (:mod:`repro.check.rules`) protecting the
+contracts that keep per_event / scan / sparse_scan / bucketed bit-exact:
+
+- ``use-after-donate`` / ``missing-alias-break`` — donated scan carries
+- ``pallas-alias`` / ``kernel-gate`` — Pallas ``input_output_aliases``
+- ``host-sync`` — implicit device→host transfers in block dispatch
+- ``rng-order`` / ``global-rng`` — scheduler sampler-surface contract
+- ``jit-in-loop`` / ``unhashable-static`` — recompile churn
+
+Run it as ``python -m repro.check src tests benchmarks``.
+
+The runtime half (:mod:`repro.check.runtime`) stacks ``jax.checking_leaks``
+and a device→host transfer guard around compiled dispatch and counts
+compiles per bucket rung — enabled in the trainer via ``REPRO_SANITIZE=1``
+or ``DecentralizedTrainer(sanitize=True)``.
+"""
+from __future__ import annotations
+
+from repro.check.engine import (
+    CheckConfig,
+    Finding,
+    Rule,
+    check_paths,
+    check_source,
+)
+
+__all__ = [
+    "CheckConfig",
+    "Finding",
+    "Rule",
+    "check_paths",
+    "check_source",
+]

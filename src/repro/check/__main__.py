@@ -1,0 +1,58 @@
+"""CLI: ``python -m repro.check [paths...]``.
+
+Exit status 0 when clean, 1 when any finding survives pragma filtering,
+2 on usage errors.  ``--format json`` emits a machine-readable document
+(CI consumes the text form; tests the JSON one).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Sequence
+
+from repro.check.engine import CheckConfig, check_paths
+from repro.check.reporters import REPORTERS, report
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.check",
+        description="repro invariant lints (donation/aliasing/host-sync/"
+        "rng-order/recompile)",
+    )
+    parser.add_argument(
+        "paths",
+        nargs="*",
+        default=["src", "tests", "benchmarks"],
+        help="files or directories to lint (default: src tests benchmarks)",
+    )
+    parser.add_argument(
+        "--format",
+        choices=sorted(REPORTERS),
+        default="text",
+        help="report format (default: text)",
+    )
+    parser.add_argument(
+        "--rules",
+        default="",
+        help="comma-separated rule ids to enable (default: all)",
+    )
+    parser.add_argument(
+        "--include-fixtures",
+        action="store_true",
+        help="also lint tests/fixtures/ (excluded by default: the check "
+        "fixtures are seeded violations)",
+    )
+    args = parser.parse_args(argv)
+
+    config = CheckConfig(
+        enabled_rules=tuple(r for r in args.rules.split(",") if r),
+        exclude=() if args.include_fixtures else CheckConfig().exclude,
+    )
+    findings = check_paths(args.paths, config)
+    report(findings, args.format, sys.stdout)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

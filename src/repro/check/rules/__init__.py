@@ -1,0 +1,32 @@
+"""Rule registry for repro.check."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.check.engine import Rule
+from repro.check.rules.aliasing import PallasAliasRule
+from repro.check.rules.donation import UseAfterDonateRule
+from repro.check.rules.host_sync import HostSyncRule
+from repro.check.rules.recompile import RecompileChurnRule
+from repro.check.rules.rng_order import RngOrderRule
+
+__all__ = [
+    "PallasAliasRule",
+    "UseAfterDonateRule",
+    "HostSyncRule",
+    "RecompileChurnRule",
+    "RngOrderRule",
+    "default_rules",
+]
+
+
+def default_rules() -> List[Rule]:
+    """Fresh instances of every registered rule (rules are stateless, but a
+    fresh list keeps callers free to mutate it)."""
+    return [
+        UseAfterDonateRule(),
+        PallasAliasRule(),
+        HostSyncRule(),
+        RngOrderRule(),
+        RecompileChurnRule(),
+    ]

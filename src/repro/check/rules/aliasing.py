@@ -1,0 +1,259 @@
+"""pallas-alias: keep ``input_output_aliases`` consistent with the call.
+
+The in-place Pallas scatter (PR 6, ``scatter_rows_pallas``) aliases its
+carry operand straight through to the output.  Three things must agree or
+the kernel silently corrupts the carry:
+
+- the alias **indices** — operand indices count the scalar-prefetch argument
+  (``PrefetchScalarGridSpec(num_scalar_prefetch=k)``), so every alias key
+  must point past the prefetch operands and inside the actual operand list
+  of the immediate ``pl.pallas_call(...)(...)`` call site, and every alias
+  value must name a real output;
+- the aliased operand's **shape/dtype** must match ``out_shape`` — XLA
+  rejects mismatched aliases at lowering time on TPU but interpret mode
+  masks it, so the lint requires ``out_shape``'s dtype to be derived from
+  the aliased operand (``X.dtype``) and its shape to be unpacked from the
+  same operand (``N, D = X.shape`` or literally ``X.shape``);
+- the ``kernel-gate`` finding: the kernel scatter scales with N in
+  interpret mode (PR 6's profile verdict), so calls to the in-place scatter
+  outside ``kernels/`` must stay behind the ``use_kernel`` TPU flag.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from repro.check.engine import (
+    CheckConfig,
+    Finding,
+    Rule,
+    call_suffix,
+    dotted_name,
+    walk_functions,
+)
+
+
+def _alias_map(call: ast.Call) -> Optional[Dict[int, int]]:
+    for kw in call.keywords:
+        if kw.arg == "input_output_aliases":
+            try:
+                val = ast.literal_eval(kw.value)
+            except (ValueError, SyntaxError):
+                return None
+            if isinstance(val, dict):
+                return {int(k): int(v) for k, v in val.items()}
+    return None
+
+
+def _num_outputs(call: ast.Call) -> Optional[int]:
+    for kw in call.keywords:
+        if kw.arg == "out_shape":
+            if isinstance(kw.value, (ast.Tuple, ast.List)):
+                return len(kw.value.elts)
+            return 1
+    return None
+
+
+def _out_shape_struct(call: ast.Call, out_idx: int) -> Optional[ast.Call]:
+    """The ``jax.ShapeDtypeStruct(...)`` node for output ``out_idx``."""
+    for kw in call.keywords:
+        if kw.arg == "out_shape":
+            node = kw.value
+            if isinstance(node, (ast.Tuple, ast.List)):
+                if out_idx < len(node.elts):
+                    node = node.elts[out_idx]
+                else:
+                    return None
+            if isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+                if name is not None and name.endswith("ShapeDtypeStruct"):
+                    return node
+    return None
+
+
+def _prefetch_count(fn: ast.AST) -> int:
+    """num_scalar_prefetch of any PrefetchScalarGridSpec built in ``fn``."""
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            name = dotted_name(node.func)
+            if name is not None and name.endswith("PrefetchScalarGridSpec"):
+                for kw in node.keywords:
+                    if kw.arg == "num_scalar_prefetch":
+                        try:
+                            return int(ast.literal_eval(kw.value))
+                        except (ValueError, SyntaxError):
+                            return 0
+    return 0
+
+
+def _shape_unpack_sources(fn: ast.AST) -> Dict[str, str]:
+    """Map shape-component name -> operand name for ``N, D = X.shape``."""
+    sources: Dict[str, str] = {}
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        src = dotted_name(node.value)
+        if src is None or not src.endswith(".shape"):
+            continue
+        operand = src[: -len(".shape")]
+        target = node.targets[0]
+        if isinstance(target, ast.Tuple):
+            for elt in target.elts:
+                if isinstance(elt, ast.Name):
+                    sources[elt.id] = operand
+        elif isinstance(target, ast.Name):
+            sources[target.id] = operand
+    return sources
+
+
+class PallasAliasRule(Rule):
+    rule_id = "pallas-alias"
+    aliases = ("kernel-gate",)
+
+    def check(
+        self, tree: ast.Module, path: str, config: CheckConfig
+    ) -> List[Finding]:
+        findings: List[Finding] = []
+        for fn, _stack in walk_functions(tree):
+            findings.extend(self._check_pallas_calls(fn, path))
+        norm = path.replace("\\", "/")
+        if "/kernels/" not in norm and not norm.startswith("kernels/"):
+            findings.extend(self._check_kernel_gating(tree, path, config))
+        return findings
+
+    # -- alias index / shape / dtype validation ---------------------------
+    def _check_pallas_calls(self, fn: ast.AST, path: str) -> List[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(fn):
+            # the idiomatic immediate call: pl.pallas_call(...)(operands...)
+            if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Call)):
+                continue
+            inner = node.func
+            if call_suffix(inner) != "pallas_call":
+                continue
+            aliases = _alias_map(inner)
+            if aliases is None:
+                continue
+            n_operands = len(node.args)
+            n_outputs = _num_outputs(inner)
+            prefetch = _prefetch_count(fn)
+            shape_sources = _shape_unpack_sources(fn)
+            for op_idx, out_idx in aliases.items():
+                if op_idx >= n_operands:
+                    findings.append(self._finding(
+                        inner, path,
+                        f"alias operand index {op_idx} out of range: the call "
+                        f"site passes {n_operands} operands"))
+                    continue
+                if op_idx < prefetch:
+                    findings.append(self._finding(
+                        inner, path,
+                        f"alias operand index {op_idx} points at a "
+                        f"scalar-prefetch operand (num_scalar_prefetch="
+                        f"{prefetch}); prefetch args count in the index but "
+                        "cannot be aliased"))
+                    continue
+                if n_outputs is not None and out_idx >= n_outputs:
+                    findings.append(self._finding(
+                        inner, path,
+                        f"alias output index {out_idx} out of range: "
+                        f"out_shape declares {n_outputs} output(s)"))
+                    continue
+                operand = dotted_name(node.args[op_idx])
+                struct = _out_shape_struct(inner, out_idx)
+                if operand is None or struct is None:
+                    continue
+                findings.extend(self._check_struct_agreement(
+                    inner, path, operand, struct, shape_sources))
+        return findings
+
+    def _check_struct_agreement(
+        self,
+        call: ast.Call,
+        path: str,
+        operand: str,
+        struct: ast.Call,
+        shape_sources: Dict[str, str],
+    ) -> List[Finding]:
+        findings: List[Finding] = []
+        args: List[ast.AST] = list(struct.args)
+        for kw in struct.keywords:
+            if kw.arg in ("shape", "dtype"):
+                args.append(kw.value)
+        shape_expr = args[0] if args else None
+        dtype_expr = args[1] if len(args) > 1 else None
+        # dtype must come off the aliased operand: X.dtype
+        dtype_name = dotted_name(dtype_expr) if dtype_expr is not None else None
+        if dtype_name != f"{operand}.dtype":
+            findings.append(self._finding(
+                call, path,
+                f"aliased operand `{operand}` must supply out_shape's dtype "
+                f"(`{operand}.dtype`); got "
+                f"`{dtype_name or 'a non-operand expression'}` — dtype "
+                "mismatch through an alias corrupts the donated buffer"))
+        # shape: either literally X.shape, or names unpacked from X.shape
+        ok = False
+        if shape_expr is not None:
+            shape_name = dotted_name(shape_expr)
+            if shape_name == f"{operand}.shape":
+                ok = True
+            elif isinstance(shape_expr, (ast.Tuple, ast.List)):
+                ok = all(
+                    isinstance(elt, ast.Name)
+                    and shape_sources.get(elt.id) == operand
+                    for elt in shape_expr.elts
+                )
+        if not ok:
+            findings.append(self._finding(
+                call, path,
+                f"out_shape's shape must be derived from the aliased operand "
+                f"(`{operand}.shape` or names unpacked from it); an aliased "
+                "output with a different shape is an XLA lowering error the "
+                "interpret path masks"))
+        return findings
+
+    def _finding(self, node: ast.AST, path: str, message: str) -> Finding:
+        return Finding(
+            rule=self.rule_id,
+            path=path,
+            line=getattr(node, "lineno", 1),
+            col=getattr(node, "col_offset", 0),
+            message=message,
+        )
+
+    # -- use_kernel gating outside kernels/ -------------------------------
+    def _check_kernel_gating(
+        self, tree: ast.Module, path: str, config: CheckConfig
+    ) -> List[Finding]:
+        findings: List[Finding] = []
+        flag = config.kernel_gate_flag
+
+        def guarded(stack: List[ast.AST]) -> bool:
+            for anc in stack:
+                if isinstance(anc, ast.If):
+                    for sub in ast.walk(anc.test):
+                        name = dotted_name(sub)
+                        if name is not None and name.split(".")[-1] == flag:
+                            return True
+            return False
+
+        def visit(node: ast.AST, stack: List[ast.AST]) -> None:
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.Call):
+                    suffix = call_suffix(child)
+                    if suffix in config.kernel_gated_calls and not guarded(stack):
+                        findings.append(Finding(
+                            rule="kernel-gate",
+                            path=path,
+                            line=child.lineno,
+                            col=child.col_offset,
+                            message=(
+                                f"`{suffix}` (in-place Pallas scatter) called "
+                                f"without a `{flag}` guard: the kernel path "
+                                "is TPU-only; interpret mode scales with N "
+                                "(see PR 6 profile)"),
+                        ))
+                visit(child, stack + [child])
+
+        visit(tree, [])
+        return findings

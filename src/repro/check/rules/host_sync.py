@@ -1,0 +1,149 @@
+"""host-sync: no implicit device→host transfers in block dispatch.
+
+The block-dispatch loops are the hot host path: one compiled call per
+packed block, everything else stays on device (PR 2/3/6/7).  An implicit
+transfer — ``float()``, ``int()``, ``bool()``, ``.item()``,
+``np.asarray``/``np.array`` applied to a jax value — blocks on the device
+inside the loop, the ~100 µs/event thunk-overhead class the ROADMAP pins
+as the end-to-end ceiling.  The sanctioned form is one *explicit*
+``jax.device_get(...)`` per block (batched, self-documenting, and legal
+under the runtime sanitizer's device→host transfer guard); everything
+downstream of it is host data and passes this rule.
+
+The rule only looks inside the dispatch-loop scopes configured in
+``CheckConfig.host_sync_scopes`` (function-name regexes): eval-time or
+drain-time syncs outside the loops are deliberate and cheap.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import List, Set
+
+from repro.check.engine import (
+    CheckConfig,
+    Finding,
+    Rule,
+    dotted_name,
+    walk_functions,
+)
+
+_CONVERTERS = {"float", "int", "bool", "complex"}
+_NP_CONVERTERS = {"np.asarray", "np.array", "numpy.asarray", "numpy.array"}
+# Explicit-fetch escapes: values produced by these are host data.
+_SANCTIONED = {"jax.device_get", "jax.block_until_ready"}
+
+
+def _is_jax_derived(node: ast.AST, derived: Set[str]) -> bool:
+    """Conservative taint: does this expression hold a jax array?"""
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func)
+        if name is not None:
+            if name in _SANCTIONED:
+                return False
+            root = name.split(".", 1)[0]
+            if root in ("jnp", "jax", "lax"):
+                return True
+            if name.rsplit(".", 1)[-1] in ("device_get",):
+                return False
+        # np.max(jax_value) etc. stays device-backed only conceptually;
+        # numpy ufuncs on jax arrays sync — propagate through the args.
+        return any(_is_jax_derived(a, derived) for a in node.args)
+    if isinstance(node, ast.Name):
+        return node.id in derived
+    if isinstance(node, ast.Attribute):
+        name = dotted_name(node)
+        return name in derived if name is not None else False
+    if isinstance(node, ast.BinOp):
+        return _is_jax_derived(node.left, derived) or _is_jax_derived(
+            node.right, derived
+        )
+    if isinstance(node, ast.UnaryOp):
+        return _is_jax_derived(node.operand, derived)
+    if isinstance(node, ast.Subscript):
+        return _is_jax_derived(node.value, derived)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return any(_is_jax_derived(e, derived) for e in node.elts)
+    if isinstance(node, ast.IfExp):
+        return _is_jax_derived(node.body, derived) or _is_jax_derived(
+            node.orelse, derived
+        )
+    return False
+
+
+class HostSyncRule(Rule):
+    rule_id = "host-sync"
+
+    def check(
+        self, tree: ast.Module, path: str, config: CheckConfig
+    ) -> List[Finding]:
+        scopes = [re.compile(p) for p in config.host_sync_scopes]
+        findings: List[Finding] = []
+        for fn, _stack in walk_functions(tree):
+            if not any(p.match(fn.name) for p in scopes):
+                continue
+            findings.extend(self._check_scope(fn, path))
+        return findings
+
+    def _check_scope(
+        self, fn: ast.FunctionDef | ast.AsyncFunctionDef, path: str
+    ) -> List[Finding]:
+        # one linear pass in source order so taint propagates through
+        # local assignments (``x = jnp.max(...); float(x)``)
+        derived: Set[str] = set()
+        findings: List[Finding] = []
+        nodes = sorted(
+            (n for n in ast.walk(fn) if hasattr(n, "lineno")),
+            key=lambda n: (n.lineno, n.col_offset),
+        )
+        for node in nodes:
+            if isinstance(node, ast.Assign):
+                if _is_jax_derived(node.value, derived):
+                    for target in node.targets:
+                        name = dotted_name(target)
+                        if name is not None:
+                            derived.add(name)
+                else:
+                    for target in node.targets:
+                        name = dotted_name(target)
+                        if name is not None:
+                            derived.discard(name)
+            elif isinstance(node, ast.Call):
+                finding = self._check_call(node, derived, path)
+                if finding is not None:
+                    findings.append(finding)
+        return findings
+
+    def _check_call(
+        self, node: ast.Call, derived: Set[str], path: str
+    ) -> Finding | None:
+        name = dotted_name(node.func)
+        # x.item() — an attribute call on a jax-derived receiver
+        if (
+            isinstance(node.func, ast.Attribute)
+            and node.func.attr == "item"
+            and _is_jax_derived(node.func.value, derived)
+        ):
+            return self._finding(node, path, ".item()")
+        if name is None:
+            return None
+        is_converter = name in _CONVERTERS or name in _NP_CONVERTERS
+        if not is_converter or not node.args:
+            return None
+        if _is_jax_derived(node.args[0], derived):
+            return self._finding(node, path, f"{name}()")
+        return None
+
+    def _finding(self, node: ast.Call, path: str, what: str) -> Finding:
+        return Finding(
+            rule=self.rule_id,
+            path=path,
+            line=node.lineno,
+            col=node.col_offset,
+            message=(
+                f"implicit device→host sync via {what} on a jax value inside "
+                "a block-dispatch scope; fetch once with an explicit "
+                "`jax.device_get(...)` instead (~100 µs/event class, and the "
+                "runtime transfer guard rejects it)"
+            ),
+        )

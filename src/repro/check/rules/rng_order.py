@@ -1,0 +1,179 @@
+"""rng-order: every scheduler RNG draw routes through a declared surface.
+
+The bit-exact event streams pinned since PR 2 are a *draw-order* contract:
+per_event ≡ scan ≡ sparse_scan ≡ bucketed holds because each scheduler
+consumes its ``np.random.default_rng(seed)`` stream in one canonical order.
+A draw added anywhere else — a debug sample, a new code path calling
+``self._rng.random()`` directly — silently forks the stream and every
+equivalence test downstream starts comparing different trajectories.
+
+The contract is made machine-checkable by declaration: any class that owns
+a generator (assigns ``self._rng``/``self.rng = np.random.default_rng(...)``)
+must carry a class attribute (default name ``rng_methods``) listing the
+methods allowed to draw from it.  This rule flags
+
+- ``rng-order``: an owning class with no surface declaration, or a
+  ``self._rng.<draw>()`` / ``self.rng.<draw>()`` call in a method outside
+  the declared surface (``__init__`` is implicitly allowed: construction
+  draws are pinned by the constructor seed);
+- ``global-rng``: any ``np.random.<fn>()`` draw through the legacy global
+  generator — unseedable per-scheduler, so never part of a pinned stream
+  (``np.random.default_rng``/``Generator``/``SeedSequence`` construction
+  is the sanctioned use of the namespace).
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set, Tuple
+
+from repro.check.engine import (
+    CheckConfig,
+    Finding,
+    Rule,
+    dotted_name,
+    walk_functions,
+)
+
+_RNG_ATTRS = ("_rng", "rng")
+_GLOBAL_OK = {"default_rng", "Generator", "SeedSequence", "PCG64", "Philox"}
+
+
+def _owns_rng(cls: ast.ClassDef) -> bool:
+    for node in ast.walk(cls):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            callee = dotted_name(node.value.func)
+            if callee is None or not callee.endswith("default_rng"):
+                continue
+            for target in node.targets:
+                name = dotted_name(target)
+                if name in tuple(f"self.{a}" for a in _RNG_ATTRS):
+                    return True
+    return False
+
+
+def _declared_surface(
+    cls: ast.ClassDef, attr: str
+) -> Optional[Tuple[int, Set[str]]]:
+    """(decl line, method names) of the class-level surface attr, if any."""
+    for stmt in cls.body:
+        target = None
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            target, value = stmt.targets[0], stmt.value
+        elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            target, value = stmt.target, stmt.value
+        else:
+            continue
+        if isinstance(target, ast.Name) and target.id == attr:
+            try:
+                val = ast.literal_eval(value)
+            except (ValueError, SyntaxError):
+                return stmt.lineno, set()
+            if isinstance(val, (tuple, list, set, frozenset)):
+                return stmt.lineno, {str(v) for v in val}
+    return None
+
+
+class RngOrderRule(Rule):
+    rule_id = "rng-order"
+    aliases = ("global-rng",)
+
+    def check(
+        self, tree: ast.Module, path: str, config: CheckConfig
+    ) -> List[Finding]:
+        findings: List[Finding] = []
+        findings.extend(self._check_global_draws(tree, path))
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef):
+                findings.extend(self._check_class(node, path, config))
+        return findings
+
+    def _check_global_draws(self, tree: ast.Module, path: str) -> List[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func)
+            if name is None:
+                continue
+            parts = name.split(".")
+            if (
+                len(parts) == 3
+                and parts[0] in ("np", "numpy")
+                and parts[1] == "random"
+                and parts[2] not in _GLOBAL_OK
+            ):
+                findings.append(
+                    Finding(
+                        rule="global-rng",
+                        path=path,
+                        line=node.lineno,
+                        col=node.col_offset,
+                        message=(
+                            f"`{name}` draws from numpy's global generator; "
+                            "streams must come from a per-scheduler "
+                            "`np.random.default_rng(seed)` to stay pinned"
+                        ),
+                    )
+                )
+        return findings
+
+    def _check_class(
+        self, cls: ast.ClassDef, path: str, config: CheckConfig
+    ) -> List[Finding]:
+        surface = _declared_surface(cls, config.rng_surface_attr)
+        owns = _owns_rng(cls)
+        if not owns and surface is None:
+            return []
+        findings: List[Finding] = []
+        if owns and surface is None:
+            findings.append(
+                Finding(
+                    rule=self.rule_id,
+                    path=path,
+                    line=cls.lineno,
+                    col=cls.col_offset,
+                    message=(
+                        f"class `{cls.name}` owns an RNG (assigns self._rng) "
+                        f"but declares no sampler surface; add "
+                        f"`{config.rng_surface_attr} = (<draw methods>,)` so "
+                        "the draw-order contract is machine-checked"
+                    ),
+                )
+            )
+            return findings
+        assert surface is not None
+        _line, allowed = surface
+        for method in cls.body:
+            if not isinstance(method, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if method.name == "__init__" or method.name in allowed:
+                continue
+            for node in ast.walk(method):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func)
+                if name is None:
+                    continue
+                parts = name.split(".")
+                if (
+                    len(parts) == 3
+                    and parts[0] == "self"
+                    and parts[1] in _RNG_ATTRS
+                ):
+                    findings.append(
+                        Finding(
+                            rule=self.rule_id,
+                            path=path,
+                            line=node.lineno,
+                            col=node.col_offset,
+                            message=(
+                                f"raw `self.{parts[1]}.{parts[2]}()` draw in "
+                                f"`{cls.name}.{method.name}`, which is not in "
+                                f"the declared sampler surface "
+                                f"{sorted(allowed)}; route it through a "
+                                "declared method or extend the surface "
+                                "(draw order is the bit-exact contract)"
+                            ),
+                        )
+                    )
+        return findings

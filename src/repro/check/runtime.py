@@ -1,0 +1,233 @@
+"""Runtime sanitizers: leak checking, transfer guard, compile counting.
+
+The static rules in :mod:`repro.check.rules` catch what the AST shows; this
+module catches the same contract violations at runtime, on a real run:
+
+- :func:`sanitized` stacks ``jax.checking_leaks()`` (no tracer escapes a
+  compiled block) and ``jax.transfer_guard_device_to_host("disallow")``
+  around compiled dispatch.  ``"disallow"`` rejects *implicit* device→host
+  transfers only — the runner's one explicit ``jax.device_get`` per
+  block/drain stays legal, and host→device stays unguarded because feeding
+  packed blocks via ``jnp.asarray(numpy)`` is the designed streaming
+  direction.
+- :class:`CompileCounter` reads the jit caches of the trainer's compiled
+  blocks and asserts the one-compile-per-rung contract from PR 6: after
+  warmup + a steady-state run, the sparse block's cache holds exactly one
+  entry per bucket rung (fixed (A, E) shape per rung via ``_bucket_cap``),
+  and nothing recompiles mid-run.
+
+The trainer enables :func:`sanitized` around its driving loop when
+constructed with ``sanitize=True`` or when ``REPRO_SANITIZE=1`` is set
+(the CI smoke tier exports it); tests use both pieces directly.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Any, Dict, Iterator, Optional
+
+import jax
+
+_FALSEY = ("", "0", "false", "no", "off")
+
+
+def sanitize_enabled(env: Optional[str] = None) -> bool:
+    """True when the ``REPRO_SANITIZE`` flag asks for sanitized runs."""
+    val = os.environ.get("REPRO_SANITIZE", "") if env is None else env
+    return val.strip().lower() not in _FALSEY
+
+
+# Implicit device→host conversion surface: every dunder/method numpy or
+# python builtins go through when a jax array is consumed host-side.
+_CONVERSIONS = ("__array__", "__float__", "__int__", "__bool__",
+                "__complex__", "__index__", "item", "tolist")
+
+# numpy 2.x converts jax arrays through the C-level buffer protocol, never
+# touching the (patchable) ``__array__`` dunder — so the guard also wraps
+# the numpy entry points and type-checks their first argument.
+_NUMPY_ENTRIES = ("asarray", "array", "asanyarray", "ascontiguousarray")
+
+
+class _HostConversionState:
+    """Shared state of the (re-entrant) host-conversion guard."""
+
+    def __init__(self) -> None:
+        self.depth = 0          # guard nesting
+        self.explicit = 0       # inside jax.device_get nesting
+        self.violations: list = []  # (conversion name, shape) tuples
+
+
+_state = _HostConversionState()
+
+
+@contextlib.contextmanager
+def host_conversion_guard(raise_on_violation: bool = True) -> Iterator[list]:
+    """Reject *implicit* jax→host conversions; explicit device_get passes.
+
+    The CPU-effective counterpart of ``jax.transfer_guard_device_to_host``:
+    on the CPU backend nothing physically transfers, so jax's guard never
+    fires — but the contract the runner pins is about *synchronization*,
+    not bytes (an implicit ``float()`` blocks dispatch exactly the same).
+    This guard patches the array type's conversion surface (``__array__``,
+    ``__float__``, ``.item()``, ...) and raises on any call not nested
+    inside an explicit ``jax.device_get``.  Yields the violation list (for
+    ``raise_on_violation=False`` auditing: (conversion, shape) tuples).
+    """
+    import numpy as np
+
+    impl = _array_impl()
+    originals = {
+        name: getattr(impl, name)
+        for name in _CONVERSIONS
+        if hasattr(impl, name)
+    }
+    np_originals = {
+        name: getattr(np, name)
+        for name in _NUMPY_ENTRIES
+        if hasattr(np, name)
+    }
+    orig_device_get = jax.device_get
+
+    def _explicit_device_get(x: Any) -> Any:
+        _state.explicit += 1
+        try:
+            return orig_device_get(x)
+        finally:
+            _state.explicit -= 1
+
+    def _violate(name: str, shape: Any) -> None:
+        _state.violations.append((name, tuple(shape)))
+        if raise_on_violation:
+            raise RuntimeError(
+                f"implicit device→host conversion `{name}` on a "
+                f"jax array of shape {tuple(shape)} inside a "
+                "sanitized block-dispatch region; fetch explicitly "
+                "with jax.device_get(...) (repro.check.runtime)")
+
+    def _wrap(name: str, orig: Any) -> Any:
+        def guarded(self, *args: Any, **kwargs: Any) -> Any:
+            if _state.depth > 0 and _state.explicit == 0:
+                _violate(name, self.shape)
+            return orig(self, *args, **kwargs)
+
+        return guarded
+
+    def _wrap_np(name: str, orig: Any) -> Any:
+        def guarded(a: Any = None, *args: Any, **kwargs: Any) -> Any:
+            if (isinstance(a, impl) and _state.depth > 0
+                    and _state.explicit == 0):
+                _violate(name, a.shape)
+            return orig(a, *args, **kwargs)
+
+        return guarded
+
+    first = _state.depth == 0
+    _state.depth += 1
+    try:
+        if first:
+            for name, orig in originals.items():
+                setattr(impl, name, _wrap(name, orig))
+            for name, orig in np_originals.items():
+                setattr(np, name, _wrap_np(name, orig))
+            jax.device_get = _explicit_device_get
+        yield _state.violations
+    finally:
+        _state.depth -= 1
+        if first:
+            for name, orig in originals.items():
+                setattr(impl, name, orig)
+            for name, orig in np_originals.items():
+                setattr(np, name, orig)
+            jax.device_get = orig_device_get
+            _state.violations = []
+
+
+def _array_impl() -> type:
+    import jax.numpy as jnp
+
+    return type(jnp.zeros(()))
+
+
+@contextlib.contextmanager
+def sanitized(
+    check_leaks: bool = True,
+    transfer_guard: Optional[str] = "disallow",
+) -> Iterator[None]:
+    """Context manager stacking the runtime sanitizers.
+
+    ``transfer_guard`` is the device→host guard level (``"disallow"``,
+    ``"log"``, ...) or None to leave transfers unguarded; jax's guard only
+    fires on accelerator backends, so :func:`host_conversion_guard` rides
+    along to enforce the same contract on CPU.  Tracing inside
+    ``jax.checking_leaks()`` is slower; this is a smoke/test mode, not a
+    production default.
+    """
+    with contextlib.ExitStack() as stack:
+        if check_leaks:
+            stack.enter_context(jax.checking_leaks())
+        if transfer_guard is not None:
+            stack.enter_context(
+                jax.transfer_guard_device_to_host(transfer_guard))
+            stack.enter_context(host_conversion_guard())
+        yield
+
+
+def jit_cache_size(fn: Any) -> Optional[int]:
+    """Entries in a jitted callable's compile cache, or None if unreadable."""
+    cache_size = getattr(fn, "_cache_size", None)
+    if cache_size is None:
+        return None
+    try:
+        return int(cache_size())
+    except Exception:
+        return None
+
+
+class CompileCounter:
+    """Track compiled-block jit caches and assert the per-rung contract.
+
+    >>> counter = CompileCounter()
+    >>> counter.track("sparse", trainer._sparse)   # after warmup/run
+    >>> counter.assert_equals("sparse", len(trainer.scheduler.active_buckets()))
+    """
+
+    def __init__(self) -> None:
+        self._tracked: Dict[str, Any] = {}
+        self._baseline: Dict[str, int] = {}
+
+    def track(self, name: str, fn: Any) -> None:
+        if fn is None or jit_cache_size(fn) is None:
+            return
+        self._tracked[name] = fn
+        self._baseline[name] = jit_cache_size(fn) or 0
+
+    def counts(self) -> Dict[str, int]:
+        return {
+            name: (jit_cache_size(fn) or 0)
+            for name, fn in self._tracked.items()
+        }
+
+    def grew(self) -> Dict[str, int]:
+        """Cache growth per tracked fn since it was first tracked."""
+        now = self.counts()
+        return {n: now[n] - self._baseline.get(n, 0) for n in now}
+
+    def assert_equals(self, name: str, expected: int) -> None:
+        got = self.counts().get(name)
+        if got is None:
+            raise AssertionError(f"`{name}` is not tracked")
+        if got != expected:
+            raise AssertionError(
+                f"compile-count contract violated for `{name}`: "
+                f"{got} cache entries, expected {expected} "
+                "(one compiled block program per bucket rung, PR 6)")
+
+    def assert_steady_state(self, name: str) -> None:
+        """No compiles since :meth:`track` — steady-state dispatch only."""
+        growth = self.grew().get(name)
+        if growth is None:
+            raise AssertionError(f"`{name}` is not tracked")
+        if growth != 0:
+            raise AssertionError(
+                f"`{name}` recompiled {growth}x after warmup: steady-state "
+                "dispatch must hit the existing per-rung programs")

@@ -169,6 +169,13 @@ class _SingleEdgeScheduler(Scheduler):
 
     lock_time = 0.0
 
+    #: Sampler surface (checked by repro.check's rng-order rule): the only
+    #: methods allowed to draw from ``self._rng``.  The draw order *is* the
+    #: pinned event stream — a draw anywhere else forks it silently.
+    #: ``_PairPackedStream.next_chunk`` draws via ``sched._rng`` on the
+    #: scheduler's behalf as the vectorized replay of ``_events_exact``.
+    rng_methods = ("_events_exact", "_events_horizon", "fused_draws")
+
     def __init__(self, graph: Graph, straggler: TimeModelSpec, seed: int,
                  horizon: Optional[int] = None):
         super().__init__(graph, straggler)
@@ -446,6 +453,9 @@ class PragueScheduler(Scheduler):
     """
 
     name = "prague"
+
+    #: rng-order sampler surface: group membership is the only draw.
+    rng_methods = ("_group_tuples",)
 
     def __init__(self, graph: Graph, straggler: TimeModelSpec,
                  group_size: int = 4, seed: int = 2):

@@ -48,6 +48,7 @@ testing (tests/test_event_stream.py) and as the reference semantics.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
@@ -176,6 +177,10 @@ class DecentralizedTrainer:
                                             # JSONL structured run log: a
                                             # path, a file-like object, or
                                             # None (disabled)
+        sanitize: Optional[bool] = None,    # wrap runs in repro.check.runtime
+                                            # .sanitized() — leak checking +
+                                            # d2h transfer guard (None = the
+                                            # REPRO_SANITIZE env flag)
     ):
         if mode not in ("scan", "sparse_scan", "per_event", "auto", "fused"):
             raise ValueError(
@@ -212,6 +217,10 @@ class DecentralizedTrainer:
         self.events_per_step = events_per_step
         self.native_generation = native_generation
         self.telemetry = bool(telemetry)
+        if sanitize is None:
+            from repro.check.runtime import sanitize_enabled
+            sanitize = sanitize_enabled()
+        self.sanitize = bool(sanitize)
         self._log = RunLogger(run_log)
         rng = jax.random.PRNGKey(seed)
         if same_init:
@@ -759,13 +768,29 @@ class DecentralizedTrainer:
                 "realization (horizon batching / fused generation): "
                 "distributionally identical to the exact per-event stream, "
                 "not bit-identical to it.", warn=False)
-        if self.mode == "fused":
-            return self._run_fused(max_events, max_time, eval_every)
-        if self.mode == "sparse_scan":
-            return self._run_sparse_stream(max_events, max_time, eval_every)
-        if self.mode == "scan":
-            return self._run_scan(max_events, max_time, eval_every)
-        return self._run_per_event(max_events, max_time, eval_every)
+        with self._maybe_sanitized():
+            if self.mode == "fused":
+                return self._run_fused(max_events, max_time, eval_every)
+            if self.mode == "sparse_scan":
+                return self._run_sparse_stream(max_events, max_time,
+                                               eval_every)
+            if self.mode == "scan":
+                return self._run_scan(max_events, max_time, eval_every)
+            return self._run_per_event(max_events, max_time, eval_every)
+
+    def _maybe_sanitized(self):
+        """The runtime sanitizer context when enabled, else a no-op.
+
+        Wraps the whole driving loop: every trace runs under
+        ``jax.checking_leaks`` and every implicit device→host transfer
+        (the ~100 µs/event sync class) raises instead of silently blocking
+        — the runner's explicit per-drain ``jax.device_get`` stays legal.
+        """
+        if not self.sanitize:
+            return contextlib.nullcontext()
+        from repro.check.runtime import sanitized
+        self._log.log("sanitize", check_leaks=True, transfer_guard="disallow")
+        return sanitized()
 
     def _run_per_event(self, max_events, max_time, eval_every) -> RunResult:
         self._ensure_per_event()
@@ -874,11 +899,12 @@ class DecentralizedTrainer:
     def _warn_pool_wrap(self, rounds: int) -> None:
         # host-side max: keeps this off the compile cache (a jnp.max here
         # would be the run's only reduce op — one more first-run compile)
-        if rounds and int(np.max(jax.device_get(self._ptr))) > self._pool_len:
+        max_ptr = int(np.max(jax.device_get(self._ptr))) if rounds else 0
+        if max_ptr > self._pool_len:
             self._log.warn_once(
                 "pool_wrap",
                 f"batch pool of {self._pool_len} draws/worker wrapped "
-                f"(max restarts {int(jnp.max(self._ptr))}): samples were "
+                f"(max restarts {max_ptr}): samples were "
                 "revisited cyclically; raise batch_pool (or bound the run "
                 "by max_events) for exact per-event sampling semantics.")
 
@@ -1147,7 +1173,9 @@ class DecentralizedTrainer:
 
     def _eval_now(self):
         avg = debiased_average(self.W, self.y)
-        loss, metric = self._eval(avg, self.eval_batch)
+        # explicit fetch: float() on the device scalars would be an implicit
+        # d2h sync (the runtime sanitizer's transfer guard rejects those)
+        loss, metric = jax.device_get(self._eval(avg, self.eval_batch))
         return float(loss), float(metric)
 
 

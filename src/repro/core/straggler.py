@@ -46,6 +46,10 @@ class TimeSampler:
     #: any order (the fused on-device generator's gate, core/fused.py).
     iid_horizon = True
 
+    #: rng-order sampler surface (repro.check): duration draws happen in
+    #: these methods only; ``__init__`` pins the heterogeneity draw.
+    rng_methods = ("sample", "sample_batch", "sample_horizon")
+
     def __init__(self, model: StragglerModel):
         self.model = model
         self._rng = np.random.default_rng(model.seed)

@@ -137,6 +137,11 @@ class FactorSampler:
     cannot diverge by construction.
     """
 
+    #: rng-order sampler surface (repro.check): the factor hooks are the
+    #: only draw sites; scenario subclasses shadow this when they override
+    #: other methods with draws (e.g. a history-dependent sample_horizon).
+    rng_methods = ("_factors_iid", "_factors_for")
+
     def __init__(self, scenario: Scenario, base: np.ndarray):
         self.scenario = scenario
         self.n = scenario.n

@@ -71,6 +71,8 @@ class PaperDefaultScenario(Scenario):
 
 
 class _HeavyTailSampler(FactorSampler):
+    rng_methods = ("_factors_iid",)
+
     def _factors_iid(self, k: int) -> np.ndarray:
         # Pareto with x_m = 1: the fastest computation is the base time, the
         # tail P[factor > x] = x^{-α} produces occasional enormous stragglers.
@@ -97,6 +99,8 @@ class HeavyTailScenario(Scenario):
 
 
 class _BimodalSampler(FactorSampler):
+    rng_methods = ("_factors_iid",)
+
     def __init__(self, scenario: "BimodalScenario"):
         n = scenario.n
         rng = np.random.default_rng(scenario.seed)
@@ -139,6 +143,10 @@ class BimodalScenario(Scenario):
 
 
 class _DiurnalSampler(FactorSampler):
+    # phase-dependent draws live in the worker-aware hook and the horizon
+    # override, not _factors_iid (there is no iid law to forward to)
+    rng_methods = ("_factors_for", "sample_horizon")
+
     def __init__(self, scenario: "DiurnalScenario"):
         super().__init__(scenario, np.full(scenario.n, scenario.base_time))
         # phase offsets spread deterministically across the ring of workers:
@@ -207,6 +215,8 @@ class DiurnalScenario(Scenario):
 
 
 class _ChurnSampler(FactorSampler):
+    rng_methods = ("_factors_iid",)
+
     def _factors_iid(self, k: int) -> np.ndarray:
         sc = self.scenario
         f = (self._rng.lognormal(mean=0.0, sigma=sc.jitter, size=k)

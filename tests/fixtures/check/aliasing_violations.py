@@ -1,0 +1,82 @@
+"""Seeded violations for the pallas-alias / kernel-gate rules."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.sparse_gossip import sparse_scatter_rows
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def alias_index_out_of_range(X):
+    N, D = X.shape
+    return pl.pallas_call(  # expect: pallas-alias
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((N, D), X.dtype),
+        input_output_aliases={5: 0},
+    )(X)
+
+
+def alias_output_out_of_range(X):
+    N, D = X.shape
+    return pl.pallas_call(  # expect: pallas-alias
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((N, D), X.dtype),
+        input_output_aliases={0: 3},
+    )(X)
+
+
+def alias_into_scalar_prefetch(workers, X):
+    N, D = X.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(num_scalar_prefetch=1, grid=(1,))
+    return pl.pallas_call(  # expect: pallas-alias
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, D), X.dtype),
+        input_output_aliases={0: 0},
+    )(workers, X)
+
+
+def alias_dtype_mismatch(X):
+    N, D = X.shape
+    return pl.pallas_call(  # expect: pallas-alias
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((N, D), jnp.float32),
+        input_output_aliases={0: 0},
+    )(X)
+
+
+def alias_shape_mismatch(X):
+    return pl.pallas_call(  # expect: pallas-alias
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((8, 128), X.dtype),
+        input_output_aliases={0: 0},
+    )(X)
+
+
+def alias_consistent(X):
+    N, D = X.shape
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((N, D), X.dtype),
+        input_output_aliases={0: 0},
+    )(X)
+
+
+def ungated_scatter(X, rows, w):
+    return sparse_scatter_rows(X, rows, w)  # expect: kernel-gate
+
+
+def gated_scatter(X, rows, w, use_kernel):
+    if not use_kernel:
+        out = X.at[w].set(rows)
+    else:
+        out = sparse_scatter_rows(X, rows, w)
+    return out
+
+
+def suppressed_scatter(X, rows, w):
+    return sparse_scatter_rows(X, rows, w)  # repro: disable=kernel-gate

@@ -1,0 +1,48 @@
+"""Seeded violations for the use-after-donate / missing-alias-break rules.
+
+Never imported or executed — linted by tests/test_check.py against the
+``# expect: <rule>`` markers.  Excluded from the repo-wide run by the
+engine's default ``tests/fixtures/`` path exclude.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def step(W, S, y):
+    return W + 1.0, S - 1.0, y
+
+
+def read_after_donate(W, S, y):
+    W2, S2, y2 = step(W, S, y)
+    return W2 + W  # expect: use-after-donate
+
+
+def read_on_error_path(W, S, y):
+    W2, S2, y2 = step(W, S, y)
+    if y2 < 0:
+        raise ValueError(f"bad push-sum weight, W was {W}")  # expect: use-after-donate
+    return W2
+
+
+def self_clearing_rebind(W, S, y):
+    W, S, y = step(W, S, y)
+    return W + S
+
+
+def suppressed_read(W, S, y):
+    W2, S2, y2 = step(W, S, y)
+    return W2 + W  # repro: disable=use-after-donate
+
+
+def builds_without_alias_break(loss_fn):
+    block = build_sparse_event_scan(loss_fn)  # expect: missing-alias-break
+    return block
+
+
+def builds_with_alias_break(loss_fn, S):
+    block = build_sparse_event_scan(loss_fn)
+    S = jax.tree.map(jnp.array, S)
+    return block, S

@@ -1,0 +1,30 @@
+"""Seeded violations for the host-sync rule (block-dispatch scopes only)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dispatch_block(batch, ptr):
+    v = jnp.max(batch)
+    a = float(v)  # expect: host-sync
+    b = int(jnp.sum(batch))  # expect: host-sync
+    c = np.asarray(jnp.ones(3))  # expect: host-sync
+    d = v.item()  # expect: host-sync
+    e = bool(jnp.any(batch > 0))  # expect: host-sync
+    ok = int(np.max(jax.device_get(ptr)))
+    quiet = float(v)  # repro: disable=host-sync
+    return a, b, c, d, e, ok, quiet
+
+
+def _run_sparse_stream(chunks):
+    total = 0
+    for chunk in chunks:
+        # host-side numpy accounting is not a device sync
+        total += int(chunk.stream_copies().sum())
+    return total
+
+
+def not_a_dispatch_scope(batch):
+    # same pattern outside the configured scopes: deliberate drain-time
+    # syncs are allowed
+    return float(jnp.max(batch))

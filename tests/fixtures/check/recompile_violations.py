@@ -1,0 +1,52 @@
+"""Seeded violations for the jit-in-loop / static-arg churn rules."""
+import functools
+
+import jax
+
+
+def _fold(x, spec):
+    return x
+
+
+fold = jax.jit(_fold, static_argnums=(1,))
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def fold_decorated(x, spec):
+    return x
+
+
+def jit_per_iteration(fns, x):
+    outs = []
+    for fn in fns:
+        jf = jax.jit(fn)  # expect: jit-in-loop
+        outs.append(jf(x))
+    return outs
+
+
+def jit_hoisted(fns, x):
+    # built once, reused across calls — the sanctioned shape
+    jitted = [jax.jit(fn) for fn in fns]
+    return [jf(x) for jf in jitted]
+
+
+def unhashable_static(x):
+    return fold(x, [1, 2])  # expect: unhashable-static
+
+
+def hashable_static(x):
+    return fold(x, (1, 2))
+
+
+def loop_varying_static(x, specs):
+    acc = x
+    for spec in specs:
+        acc = fold_decorated(acc, spec)  # expect: loop-varying-static
+    return acc
+
+
+def suppressed(fns, x):
+    for fn in fns:
+        jf = jax.jit(fn)  # repro: disable=jit-in-loop
+        x = jf(x)
+    return x

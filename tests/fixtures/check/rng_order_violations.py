@@ -1,0 +1,36 @@
+"""Seeded violations for the rng-order / global-rng rules."""
+import numpy as np
+
+
+class UndeclaredScheduler:  # expect: rng-order
+    def __init__(self, seed):
+        self._rng = np.random.default_rng(seed)
+
+    def events(self):
+        return self._rng.random(4)
+
+
+class DeclaredScheduler:
+    rng_methods = ("_events_exact",)
+
+    def __init__(self, seed):
+        self._rng = np.random.default_rng(seed)
+        # construction-time draws are pinned by the constructor seed
+        self.base = self._rng.random(8)
+
+    def _events_exact(self):
+        return self._rng.random(4)
+
+    def debug_sample(self):
+        return self._rng.random()  # expect: rng-order
+
+    def suppressed_sample(self):
+        return self._rng.random()  # repro: disable=rng-order
+
+
+def legacy_global_noise(k):
+    return np.random.rand(k)  # expect: global-rng
+
+
+def sanctioned_constructor(seed):
+    return np.random.default_rng(seed)

@@ -297,13 +297,14 @@ class TestScatterKernel:
         block_d multiple (pad lanes carry -1, pad columns are cropped)."""
         X, rows, w = self._case(16, 200, 3, 1, seed=4)
         Xc = jnp.array(X)  # keep an undonated copy for the oracle
-        out = sparse_scatter_rows(X, rows, w, block_d=256)
+        out = sparse_scatter_rows(X, rows, w, block_d=256)  # repro: disable=kernel-gate
         ref = sparse_scatter_rows_ref(Xc, rows, w)
         np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
     def test_standalone_call_donates_the_carry(self):
         X, rows, w = self._case(16, 256, 4, 1, seed=2)
         X = jnp.array(X) + 0.0  # a buffer this test uniquely owns
-        out = sparse_scatter_rows(X, rows, w, block_d=256)
+        out = sparse_scatter_rows(X, rows, w, block_d=256)  # repro: disable=kernel-gate
         assert out.shape == (16, 256)
-        assert X.is_deleted()   # the O(N·D) carry copy is really gone
+        # the donated-buffer read below is the point of the test
+        assert X.is_deleted()   # repro: disable=use-after-donate

@@ -1,0 +1,136 @@
+"""The repro.check lint engine: rules, pragmas, reporters, CLI, clean tree.
+
+The fixture corpus under ``tests/fixtures/check/`` seeds one violation per
+rule family with ``# expect: <rule>`` markers on the exact lines findings
+must anchor to — the parametrized test asserts the finding set equals the
+expectation set, so a rule that over-fires (extra lines) or under-fires
+(missed lines) both fail.  Pragma-suppressed duplicates in the same
+fixtures carry no marker, which *is* the suppression assertion.
+"""
+import io
+import json
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.check import CheckConfig, check_paths, check_source
+from repro.check.__main__ import main as check_main
+from repro.check.reporters import report_json, report_text
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "fixtures" / "check"
+_EXPECT = re.compile(r"#\s*expect:\s*(?P<rules>[\w\-]+(?:\s*,\s*[\w\-]+)*)")
+
+# fixtures are seeded violations: lint them with the path exclude lifted
+FIXTURE_CFG = CheckConfig(exclude=())
+
+
+def _expectations(source: str):
+    exp = {}
+    for lineno, line in enumerate(source.splitlines(), 1):
+        m = _EXPECT.search(line)
+        if m:
+            exp[lineno] = {r.strip() for r in m.group("rules").split(",")}
+    return exp
+
+
+@pytest.mark.parametrize(
+    "fixture", sorted(FIXTURES.glob("*.py")), ids=lambda p: p.stem)
+def test_fixture_findings_match_expectations(fixture):
+    source = fixture.read_text()
+    expected = _expectations(source)
+    assert expected, f"fixture {fixture.name} declares no expectations"
+    findings = check_source(source, str(fixture), FIXTURE_CFG)
+    got = {}
+    for f in findings:
+        got.setdefault(f.line, set()).add(f.rule)
+    assert got == expected, (
+        f"{fixture.name}: findings {got} != expected {expected}")
+
+
+def test_every_rule_family_has_a_fixture():
+    rules_seen = set()
+    for fixture in FIXTURES.glob("*.py"):
+        for lines in _expectations(fixture.read_text()).values():
+            rules_seen |= lines
+    assert {
+        "use-after-donate", "missing-alias-break", "pallas-alias",
+        "kernel-gate", "host-sync", "rng-order", "global-rng",
+        "jit-in-loop", "unhashable-static", "loop-varying-static",
+    } <= rules_seen
+
+
+def test_blanket_pragma_suppresses_all_rules():
+    src = "import numpy as np\nx = np.random.rand(3)  # repro: disable\n"
+    assert check_source(src, "t.py", FIXTURE_CFG) == []
+    src_wrong = "import numpy as np\nx = np.random.rand(3)  # repro: disable=host-sync\n"
+    assert [f.rule for f in check_source(src_wrong, "t.py", FIXTURE_CFG)] == [
+        "global-rng"]
+
+
+def test_pragma_inside_string_literal_is_inert():
+    src = ('import numpy as np\n'
+           's = "# repro: disable=global-rng"\n'
+           'x = np.random.rand(3)\n')
+    assert [f.rule for f in check_source(src, "t.py", FIXTURE_CFG)] == [
+        "global-rng"]
+
+
+def test_rule_selection_config():
+    fixture = FIXTURES / "rng_order_violations.py"
+    cfg = CheckConfig(exclude=(), enabled_rules=("global-rng",))
+    # rng-order is an alias of the same rule instance: selection is by the
+    # rule's primary id, so enabling either family id enables the family
+    findings = check_source(fixture.read_text(), str(fixture), cfg)
+    assert findings == []
+    cfg = CheckConfig(exclude=(), enabled_rules=("rng-order",))
+    findings = check_source(fixture.read_text(), str(fixture), cfg)
+    assert {f.rule for f in findings} == {"rng-order", "global-rng"}
+
+
+def test_parse_error_is_reported_not_raised():
+    findings = check_source("def broken(:\n", "t.py", FIXTURE_CFG)
+    assert [f.rule for f in findings] == ["parse-error"]
+
+
+def test_repo_tree_is_clean():
+    """The acceptance gate: zero findings on src/tests/benchmarks."""
+    findings = check_paths([str(REPO / "src"), str(REPO / "tests"),
+                            str(REPO / "benchmarks")])
+    assert findings == [], "\n".join(f.format() for f in findings)
+
+
+def test_default_config_excludes_fixture_corpus():
+    findings = check_paths([str(FIXTURES)])
+    assert findings == []
+    assert check_paths([str(FIXTURES)], FIXTURE_CFG), (
+        "lifting the exclude must surface the seeded violations")
+
+
+def test_text_and_json_reporters():
+    fixture = FIXTURES / "host_sync_violations.py"
+    findings = check_source(fixture.read_text(), str(fixture), FIXTURE_CFG)
+    assert findings
+    out = io.StringIO()
+    report_text(findings, out)
+    text = out.getvalue()
+    assert "[host-sync]" in text and f"{len(findings)} finding(s)" in text
+    out = io.StringIO()
+    report_json(findings, out)
+    doc = json.loads(out.getvalue())
+    assert doc["total"] == len(findings)
+    assert doc["counts"]["host-sync"] == len(findings)
+    assert {f["rule"] for f in doc["findings"]} == {"host-sync"}
+    assert all(f["path"].endswith("host_sync_violations.py")
+               for f in doc["findings"])
+
+
+def test_cli_exit_codes(capsys):
+    assert check_main([str(REPO / "src")]) == 0
+    capsys.readouterr()
+    rc = check_main(["--include-fixtures", "--format", "json",
+                     str(FIXTURES / "recompile_violations.py")])
+    assert rc == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["counts"]["jit-in-loop"] == 1
