@@ -23,7 +23,9 @@ N=256 packed to the static bound sits under 4% lane fill).
 Event *generation* (host-side numpy) is timed separately: it bounds every
 consumer from above.  The opt-in event-horizon batcher is timed for the
 single-edge schedulers only (the others don't accept ``horizon=``; their
-rows carry an explicit ``gen_horizon_eps: "unsupported"`` marker).
+rows record ``gen_horizon_eps: null`` — the number-or-null metric schema
+enforced by ``common.write_bench_json``, which also normalizes the legacy
+``"unsupported"`` string older recordings carried).
 
 Two further columns record the device-resident streaming pipeline:
 
@@ -47,6 +49,14 @@ that counters never cost a host sync or per-event scatter on the fused
 path.  ``e2e_tel_eps`` records the same pair for the DSGD-AAU sparse
 stream (the bucketed ladder, worst case for extra carries).
 
+Trace overhead (``repro.obs.trace``): ``e2e_trace_eps`` /
+``trace_overhead`` re-time the DSGD-AAU stream with ``trace=True`` —
+host-side event-identity recording per block plus the end-of-run
+wait-blame attribution — and ``--smoke`` asserts the same < 1.10x bound
+(tracing must never sync mid-run); ``fused_trace_eps`` records the fused
+pair, whose whole-run payload is fetched with a single ``jax.device_get``
+at drain.
+
   python -m benchmarks.bench_event_stream [--paper-scale] [--xl] [--smoke]
       # writes BENCH_event_stream.json
 
@@ -61,14 +71,13 @@ from __future__ import annotations
 
 import argparse
 import itertools
-import json
 import os
 import time
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import bench_sizes, csv_row
+from benchmarks.common import bench_sizes, csv_row, write_bench_json
 from repro.core import topology
 from repro.core.baselines import make_scheduler
 from repro.core.runner import DecentralizedTrainer
@@ -146,18 +155,21 @@ def _events_per_sec(alg: str, mode: str, n: int, events: int,
     return best
 
 
-def _telemetry_overhead_pair(alg: str, mode: str, n: int, events: int,
-                             block_size: int, repeats: int = 3,
-                             **sched_kw):
-    """(base_eps, telemetry_eps) for ``mode``, measured interleaved.
+def _flag_overhead_pair(alg: str, mode: str, n: int, events: int,
+                        block_size: int, flag: str = "telemetry",
+                        repeats: int = 3, **sched_kw):
+    """(base_eps, flag_on_eps) for ``mode``, measured interleaved.
 
-    The with/without-MetricsCarry timings alternate run-by-run (best-of
+    ``flag`` names the trainer observability switch under test
+    (``telemetry`` — the MetricsCarry of device accumulators — or
+    ``trace`` — event-identity recording plus the end-of-run wait-blame
+    attribution).  The with/without timings alternate run-by-run (best-of
     ``repeats`` each) so background load drift hits both sides equally —
     a sequential pair can fake a ±20% "overhead" on a busy host.
     """
-    trs = {tel: _make_trainer(alg, mode, n, block_size,
-                              dict(telemetry=tel), **sched_kw)
-           for tel in (False, True)}
+    trs = {on: _make_trainer(alg, mode, n, block_size,
+                             {flag: on}, **sched_kw)
+           for on in (False, True)}
     for tr in trs.values():
         tr.warmup()
         tr.run(max_events=block_size, eval_every=10 ** 9)  # steady state
@@ -224,8 +236,9 @@ def run(paper_scale: bool = False, smoke: bool = False, xl: bool = False):
                           1e6 / gen_h, f"{gen_h:.0f} events/s horizon gen")
         else:
             # multi-worker restart sets consume the RNG in event order —
-            # the horizon batcher's flat pre-draw doesn't apply
-            row["gen_horizon_eps"] = "unsupported"
+            # the horizon batcher's flat pre-draw doesn't apply (null, per
+            # the number-or-null metric schema; see common.write_bench_json)
+            row["gen_horizon_eps"] = None
         if alg in FUSED_ALGS:
             # Telemetry overhead: the same fused config with a MetricsCarry
             # of device accumulators riding the block.  Smoke asserts the
@@ -233,7 +246,7 @@ def run(paper_scale: bool = False, smoke: bool = False, xl: bool = False):
             # drift can't fake a regression.
             tel_events = max(events, 2048) if smoke else events
             tel_block = min(BLOCK_SIZE, tel_events)
-            fused, fused_tel = _telemetry_overhead_pair(
+            fused, fused_tel = _flag_overhead_pair(
                 alg, "fused", n, tel_events, tel_block,
                 repeats=4 if smoke else 2)
             overhead = fused / fused_tel
@@ -250,6 +263,24 @@ def run(paper_scale: bool = False, smoke: bool = False, xl: bool = False):
                 assert overhead < 1.10, (
                     f"device-resident telemetry cost {overhead:.3f}x on the "
                     f"fused path (contract: < 1.10x)")
+            # The trace rides the same widened scan outputs and pays one
+            # jax.device_get over the whole run's payload at drain
+            # (repro.obs.trace.drain_fused_payload) — recorded so the
+            # drain-once design has a number; the asserted contract row is
+            # the streaming pair below.
+            # always >= 2048 events: the drain's fixed cost (one device_get
+            # + attribution) on a ~30 ms run otherwise reads as a fake
+            # 10-20% "overhead"
+            fused_tr_events = max(events, 2048)
+            fused_tr_base, fused_trace = _flag_overhead_pair(
+                alg, "fused", n, fused_tr_events,
+                min(BLOCK_SIZE, fused_tr_events), flag="trace", repeats=4)
+            row["fused_trace_eps"] = fused_trace
+            row["fused_trace_overhead"] = fused_tr_base / fused_trace
+            yield csv_row(f"event_stream_fused_trace_{alg}_n{n}",
+                          1e6 / fused_trace,
+                          f"{fused_trace:.0f} events/s with trace "
+                          f"({fused_tr_base / fused_trace:.3f}x overhead)")
         if n <= PER_EVENT_MAX_N:
             per_event = _events_per_sec(alg, "per_event", n, events, block)
             row["per_event_eps"] = per_event
@@ -287,7 +318,7 @@ def run(paper_scale: bool = False, smoke: bool = False, xl: bool = False):
             # contract row is the fused pair above.  Measured interleaved
             # (its own base, not e2e_eps: a separately-timed pair under
             # host generation noise can fake a large ratio).
-            e2e_base, e2e_tel = _telemetry_overhead_pair(
+            e2e_base, e2e_tel = _flag_overhead_pair(
                 alg, "sparse_scan", n, events, block,
                 repeats=2 if smoke else 3)
             row["e2e_tel_eps"] = e2e_tel
@@ -295,6 +326,27 @@ def run(paper_scale: bool = False, smoke: bool = False, xl: bool = False):
             yield csv_row(f"event_stream_e2e_tel_{alg}_n{n}", 1e6 / e2e_tel,
                           f"{e2e_tel:.0f} events/s streaming with telemetry "
                           f"({e2e_base / e2e_tel:.3f}x overhead)")
+            # Trace cost on the same worst-case stream: host-side identity
+            # recording per block plus the end-of-run wait-blame pass
+            # (repro.obs.critical_path) — the contract is that tracing
+            # never syncs mid-run, so the asserted bound matches the
+            # telemetry one.  Longer runs in smoke: a 64-event run is all
+            # fixed cost and would fake any ratio.
+            trace_events = max(events, 2048) if smoke else events
+            trace_block = min(BLOCK_SIZE, trace_events)
+            trace_base, e2e_trace = _flag_overhead_pair(
+                alg, "sparse_scan", n, trace_events, trace_block,
+                flag="trace", repeats=3)
+            row["e2e_trace_eps"] = e2e_trace
+            row["trace_overhead"] = trace_base / e2e_trace
+            yield csv_row(f"event_stream_e2e_trace_{alg}_n{n}",
+                          1e6 / e2e_trace,
+                          f"{e2e_trace:.0f} events/s streaming with trace "
+                          f"({trace_base / e2e_trace:.3f}x overhead)")
+            if smoke:
+                assert row["trace_overhead"] < 1.10, (
+                    f"virtual-time tracing cost {row['trace_overhead']:.3f}x "
+                    f"on the streaming path (contract: < 1.10x)")
         results.append(row)
     payload = {
         "bench": "event_stream",
@@ -303,9 +355,7 @@ def run(paper_scale: bool = False, smoke: bool = False, xl: bool = False):
         "results": results,
     }
     if not smoke:  # smoke checks runnability; don't clobber measured rows
-        with open(os.path.abspath(_JSON_PATH), "w") as f:
-            json.dump(payload, f, indent=2)
-            f.write("\n")
+        write_bench_json(os.path.abspath(_JSON_PATH), payload)
 
 
 def main():

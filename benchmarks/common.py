@@ -7,6 +7,8 @@ benchmark scale is N=16/32 so the whole suite runs on CPU in minutes — pass
 """
 from __future__ import annotations
 
+import json
+import math
 import time
 
 from repro.configs import get_config
@@ -88,3 +90,58 @@ def timed_run(trainer: DecentralizedTrainer, **run_kw):
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def _bench_json_safe(v, key=""):
+    if isinstance(v, str):
+        # legacy sentinel for "this metric doesn't apply to this row" —
+        # normalize to null so numeric readers never meet a string
+        return None if v == "unsupported" else v
+    if v is None or isinstance(v, (bool, int)):
+        return v
+    if isinstance(v, float):  # accepts np.float64 (a float subclass)
+        if math.isnan(v) or math.isinf(v):
+            raise ValueError(f"non-finite metric {v!r} at {key!r} — a bench "
+                             "row must record numbers or null")
+        return v
+    if isinstance(v, dict):
+        return {str(k): _bench_json_safe(x, f"{key}.{k}") for k, x in
+                v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_bench_json_safe(x, f"{key}[{i}]") for i, x in enumerate(v)]
+    raise TypeError(
+        f"non-JSON value {v!r} ({type(v).__name__}) at {key!r} — convert "
+        "numpy scalars with float()/int() before recording")
+
+
+def write_bench_json(path: str, payload: dict) -> None:
+    """Typed writer for ``BENCH_*.json`` — schema discipline at the write.
+
+    Earlier recordings marked an inapplicable metric with the *string*
+    ``"unsupported"``, which silently breaks numeric readers.  The schema
+    is now "number or null": this helper maps the legacy sentinel to
+    ``None``, rejects NaN/Inf and non-JSON scalars (numpy int32/float32
+    must be converted at the call site), and is the single write path for
+    every bench artifact.  Readers stay tolerant of legacy files via
+    :func:`as_metric`.
+    """
+    with open(path, "w") as f:
+        json.dump(_bench_json_safe(payload), f, indent=2, allow_nan=False)
+        f.write("\n")
+
+
+def as_metric(v):
+    """Read a bench metric tolerantly: float, or None when inapplicable.
+
+    Accepts the current schema (number | null), the legacy
+    ``"unsupported"`` string, the xp artifacts' ``"nan"``/``"inf"``
+    strings, and anything non-numeric — everything that isn't a finite
+    number comes back as None.
+    """
+    if isinstance(v, bool) or not isinstance(v, (int, float, str)):
+        return None
+    try:
+        f = float(v)
+    except ValueError:
+        return None
+    return None if (math.isnan(f) or math.isinf(f)) else f

@@ -111,6 +111,44 @@ def telemetry_report(artifact):
     return "\n".join(out)
 
 
+def straggler_tax_table(artifact):
+    """Per-algorithm wait-blame / straggler-tax table.
+
+    Rendered from the artifact's ``trace`` section (present when the sweep
+    ran with ``--trace``): one row per (scenario, N, algorithm) with the
+    straggler tax (wait / (busy + wait) on the virtual clock), the
+    blame/residual split from the critical-path attribution
+    (repro/obs/critical_path — blame is wait charged to a causing worker,
+    residual is lock/serialization wait with no worker to blame), blame
+    concentration (largest single worker's share of total blame) and the
+    critical path's wait fraction.
+    """
+    rows = artifact.get("trace", [])
+    if not rows:
+        return "(no trace recorded — run with --trace)"
+    out = ["| scenario | N | algorithm | straggler tax | blame t | "
+           "residual t | blame conc. | top blamed | cp wait frac |",
+           "|---|---:|---|---:|---:|---:|---:|---|---:|"]
+    for r in sorted(rows, key=lambda r: (r["scenario"], r["n"],
+                                         r["algorithm"])):
+        top = "; ".join(f"w{b['worker']}:{100 * _f(b['share']):.0f}%"
+                        for b in r.get("blame_top", [])[:3]) or "—"
+        out.append(
+            f"| {r['scenario']} | {r['n']} | {r['algorithm']} "
+            f"| {_f(r['straggler_tax_mean']):.3f} "
+            f"| {_f(r['blame_total_mean']):.2f} "
+            f"| {_f(r['residual_wait_mean']):.2f} "
+            f"| {_f(r['blame_concentration']):.2f} | {top} "
+            f"| {_f(r['cp_wait_frac_mean']):.3f} |")
+    return "\n".join(out)
+
+
+def trace_tables(path="BENCH_trace.json"):
+    artifact = json.load(open(path))
+    print("### Straggler tax (wait-blame attribution, mean over seeds)\n")
+    print(straggler_tax_table(artifact))
+
+
 def convergence_csv(artifact):
     """Flat CSV of the seed-averaged convergence curves (plotting input)."""
     out = ["scenario,n,algorithm,k,time_mean,loss_mean,loss_std,metric_mean"]
@@ -131,6 +169,9 @@ def paper_figures(path="BENCH_paper_figures.json"):
     print(dtype_table(artifact))
     print("\n### Telemetry (per-worker utilization and staleness)\n")
     print(telemetry_report(artifact))
+    if artifact.get("trace"):  # tolerate artifacts recorded without --trace
+        print("\n### Straggler tax (wait-blame attribution)\n")
+        print(straggler_tax_table(artifact))
     print("\n### Convergence curves (CSV)\n")
     print(convergence_csv(artifact))
 
@@ -190,6 +231,9 @@ def before_after(baseline, opt, pairs):
 if __name__ == "__main__":
     if len(sys.argv) > 1 and sys.argv[1] == "paper_figures":
         paper_figures(*sys.argv[2:3])
+        sys.exit(0)
+    if len(sys.argv) > 1 and sys.argv[1] == "trace":
+        trace_tables(*sys.argv[2:3])
         sys.exit(0)
     single = load("experiments/dryrun_single.json")
     multi = load("experiments/dryrun_multi.json")

@@ -86,6 +86,12 @@ class CheckConfig:
         r"^_fused_record$",
         r"^_warn_pool_wrap$",
         r"^warmup$",
+        # virtual-time tracing (repro.obs.trace): the drain is the one
+        # sanctioned host fetch per traced run; the recorders run on the
+        # hot dispatch path and must stay sync-free
+        r"^_trace_summary$",
+        r"^drain_fused_payload$",
+        r"^record_(event|events|sparse|chunk|fused)$",
     )
     rng_surface_attr: str = "rng_methods"
     kernel_gate_flag: str = "use_kernel"

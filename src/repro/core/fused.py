@@ -75,11 +75,16 @@ def build_fused_pair_scan(loss_fn: Callable, spec: Dict[str, object],
     per-event outputs widen from ``t_ev`` to ``(t_ev, i, p, t)`` — each
     event's lock-shifted clock, finisher, partner (−1 when isolated) and
     raw completion.  The runner buffers those outputs per block (device
-    arrays, never synced) and folds the whole run's stream into its
-    :class:`~repro.obs.metrics.MetricsCarry` once at drain time via
-    :func:`~repro.obs.metrics.fused_metrics_fold`, so the fused path stays
-    free of per-event host work *and* of in-block telemetry arithmetic.
-    The state trajectory is unchanged.
+    arrays, never synced) and consumes the whole run's stream once at
+    drain time: folded into its
+    :class:`~repro.obs.metrics.MetricsCarry` via
+    :func:`~repro.obs.metrics.fused_metrics_fold`, and/or fetched with a
+    single ``jax.device_get`` for the virtual-time trace
+    (:func:`~repro.obs.trace.drain_fused_payload` — the runner passes
+    ``telemetry=True`` here when *either* of its telemetry/trace flags is
+    set, since both ride the same widened outputs).  The fused path thus
+    stays free of per-event host work *and* of in-block observability
+    arithmetic.  The state trajectory is unchanged.
     """
     grad_fn = jax.grad(loss_fn)
     deg = jnp.asarray(spec["deg"], dtype=jnp.int32)

@@ -5,7 +5,9 @@ with the updates from core/aau.py.  Records loss / accuracy versus both the
 iteration counter and the *virtual wall-clock*, plus cumulative
 communication, reproducing the paper's Figures 3–5 measurement protocol.
 
-Execution model — block-compiled by default (``mode="scan"``):
+Execution model — block-compiled, mode chosen automatically by default
+(``mode="auto"`` resolves to the dense ``scan`` or the active-set
+``sparse_scan`` via :func:`choose_mode`'s recorded crossover heuristic):
 
 - The event stream is packed ``block_size`` events at a time into
   :class:`~repro.core.scheduler.EventBatch` stacked arrays and replayed on
@@ -62,7 +64,9 @@ from repro.core.scheduler import (BucketedSparseEventBatch, EventBatch,
                                   Scheduler, SparseEventBatch,
                                   merge_event_groups)
 from repro.obs import RunLogger, init_metrics, metrics_summary
+from repro.obs.critical_path import straggler_tax
 from repro.obs.metrics import dense_metrics_update, fused_metrics_fold
+from repro.obs.trace import TraceRecorder, drain_fused_payload
 from repro.utils.tree import tree_size, tree_stack
 
 
@@ -114,6 +118,11 @@ class RunResult:
     # (repro.obs.metrics.metrics_summary).
     bytes_per_scalar: int = 4
     telemetry: Optional[Dict] = None
+    # With trace=True, the wait-blame / critical-path summary
+    # (repro.obs.critical_path.straggler_tax) of the run's recorded
+    # event-identity stream; the full Trace stays on the trainer as
+    # ``trainer.last_trace`` (export it with repro.obs.chrome_trace).
+    trace: Optional[Dict] = None
 
     def comm_bytes(self, bytes_per_scalar: Optional[int] = None) -> int:
         bps = self.bytes_per_scalar if bytes_per_scalar is None else bytes_per_scalar
@@ -149,8 +158,11 @@ class DecentralizedTrainer:
         seed: int = 0,
         use_kernel: bool = False,
         same_init: bool = True,
-        mode: str = "scan",                 # "scan" | "sparse_scan" |
-                                            # "per_event" | "auto" | "fused"
+        mode: str = "auto",                 # "auto" (choose_mode picks scan
+                                            # vs sparse_scan from n and the
+                                            # scheduler's lane ladder) |
+                                            # "scan" | "sparse_scan" |
+                                            # "per_event" | "fused"
         block_size: int = 32,               # events per compiled scan call
         batch_pool: Optional[int] = None,   # pre-drawn samples per worker
                                             # (scan mode; None = auto from the
@@ -173,6 +185,13 @@ class DecentralizedTrainer:
                                             # counters (repro.obs): drained
                                             # once per run into
                                             # RunResult.telemetry
+        trace: bool = False,                # record the event-identity
+                                            # stream (repro.obs.trace):
+                                            # wait-blame summary in
+                                            # RunResult.trace, full Trace
+                                            # in trainer.last_trace —
+                                            # host-side recording, one
+                                            # device fetch max (fused)
         run_log: Optional[Union[str, object]] = None,
                                             # JSONL structured run log: a
                                             # path, a file-like object, or
@@ -217,6 +236,7 @@ class DecentralizedTrainer:
         self.events_per_step = events_per_step
         self.native_generation = native_generation
         self.telemetry = bool(telemetry)
+        self.trace = bool(trace)
         if sanitize is None:
             from repro.check.runtime import sanitize_enabled
             sanitize = sanitize_enabled()
@@ -255,6 +275,8 @@ class DecentralizedTrainer:
         self._fused_payload = None  # per-block (t_ev, i, p, t_raw) device
                                     #   streams, folded once at drain
         self._fused_fold = None     # jitted fused_metrics_fold
+        self._trace = None          # TraceRecorder (host-side buffers)
+        self.last_trace = None      # finalized Trace of the latest run
 
     def _cast(self, tree):
         """Apply the worker-state dtype policy to a pytree's float leaves."""
@@ -402,13 +424,15 @@ class DecentralizedTrainer:
             jnp.asarray(batch.restart_workers),
             jnp.asarray(etas, dtype=jnp.float32),
         )
+        # logged for every dispatch (no-op without a run log): the wall-
+        # clock track of repro.obs.trace is built from these records
+        self._log.log("block_dispatch", mode="scan", events=E,
+                      padded=batch.E, rounds=rounds)
         if not self.telemetry:
             with jax.profiler.TraceAnnotation("dispatch:scan"):
                 self.W, self.S, self.y, self._ptr = self._scan(
                     *args[:4], self._pools, *args[4:])
             return
-        self._log.log("block_dispatch", mode="scan", events=E,
-                      padded=batch.E, rounds=rounds)
         Ep = batch.E
         fin = batch.finish if batch.finish is not None \
             else np.broadcast_to(batch.times[:, None], (Ep, self.n))
@@ -457,14 +481,14 @@ class DecentralizedTrainer:
             jnp.asarray(batch.restart_workers),
             jnp.asarray(etas, dtype=jnp.float32),
         )
+        self._log.log("block_dispatch", mode="sparse_scan", events=E,
+                      padded=batch.E, lanes=batch.A, rounds=rounds,
+                      merged=lane_off is not None)
         if not self.telemetry:
             with jax.profiler.TraceAnnotation("dispatch:sparse_scan"):
                 self.W, self.S, self.y, self._ptr = self._sparse(
                     *args[:4], self._pools, *args[4:])
             return
-        self._log.log("block_dispatch", mode="sparse_scan", events=E,
-                      padded=batch.E, lanes=batch.A, rounds=rounds,
-                      merged=lane_off is not None)
         Ep, A = batch.E, batch.A
         # Per-lane event indices and clocks: every lane of an unmerged row
         # shares the row's event; a merged row's lanes keep their source
@@ -650,6 +674,27 @@ class DecentralizedTrainer:
                     "bounded-staleness guarantee.")
         return summary
 
+    def _trace_summary(self) -> Optional[Dict]:
+        """Finalize the recorded identity stream; one device fetch max.
+
+        Host modes recorded everything host-side already; a fused run's
+        buffered device blocks are fetched here with a single explicit
+        ``jax.device_get`` (``drain_fused_payload``).  Runs *before* the
+        telemetry drain in every finish path — ``_telemetry_summary``
+        consumes and clears ``_fused_payload``.
+        """
+        if not self.trace or self._trace is None:
+            return None
+        if self._fused_payload:
+            host = drain_fused_payload(self._fused_payload)
+            self._trace.record_fused(
+                *host,
+                copies_pair=int(self.scheduler.fused_spec()["copies_pair"]))
+        tr = self._trace.finalize(algorithm=self.scheduler.name,
+                                  mode=self.mode)
+        self.last_trace = tr
+        return straggler_tax(tr)
+
     def warmup(self) -> None:
         """Compile this trainer's update and eval with no-op dispatches.
 
@@ -680,9 +725,9 @@ class DecentralizedTrainer:
                 *clones, self._pools, *clock,
                 jnp.int32(0), zeros, zeros, zeros,
             )
-            # warmup's streamed payload is discarded (telemetry widens the
-            # scan outputs; the block signature is otherwise identical)
-            t_seq = ys[0] if self.telemetry else ys
+            # warmup's streamed payload is discarded (telemetry/trace widen
+            # the scan outputs; the block signature is otherwise identical)
+            t_seq = ys[0] if (self.telemetry or self.trace) else ys
             carry[2].block_until_ready()
             self._warm_eval()
             # Also warm the per-eval recording ops (row build + history
@@ -756,11 +801,15 @@ class DecentralizedTrainer:
             # previous run would alias as negative staleness
             self._metrics = self._init_metrics(self.n)
             self._bucket_occ = {}
+        if self.telemetry or self.trace:
             self._fused_payload = []
+        if self.trace:
+            self._trace = TraceRecorder(self.n)
         self._log.log("run_start", algorithm=self.scheduler.name, n=self.n,
                       mode=self.mode, max_events=max_events,
                       max_time=max_time, eval_every=eval_every,
-                      dtype=str(self.dtype), telemetry=self.telemetry)
+                      dtype=str(self.dtype), telemetry=self.telemetry,
+                      trace=self.trace)
         if self.mode == "fused" or getattr(self.scheduler, "horizon", None):
             self._log.warn_once(
                 "rng_order",
@@ -808,6 +857,8 @@ class DecentralizedTrainer:
             k, t = ev.k, ev.time
             comm += ev.param_copies_sent
             active_sizes.append(ev.n_active)
+            if self.trace:
+                self._trace.record_event(ev)
             eta = jnp.float32(
                 self.eta0 * (self.eta_decay ** (rounds // self.eta_decay_every)))
             P_dev = jnp.asarray(ev.P, dtype=jnp.float32)
@@ -883,6 +934,10 @@ class DecentralizedTrainer:
                 exhausted and buf)
             if not flush:
                 continue
+            if self.trace:
+                # recorded pre-pack, pre-pad: the same object events the
+                # per-event reference replays, so the traces bit-match
+                self._trace.record_events(buf)
             self._dispatch_block(
                 EventBatch.from_events(buf, edge_bound=bound), rounds,
                 target)
@@ -957,6 +1012,10 @@ class DecentralizedTrainer:
             active_sizes.extend(chunk.stream_n_active().tolist())
             t = float(tms[-1])
             k = rounds + chunk.E - 1
+            if self.trace:
+                # pre-merge, pre-pad packed arrays (bucketed chunks are
+                # walked segment-by-segment in stream order)
+                self._trace.record_chunk(chunk)
             if isinstance(chunk, BucketedSparseEventBatch):
                 if self.telemetry:
                     self._accum_occupancy(chunk.occupancy())
@@ -981,10 +1040,15 @@ class DecentralizedTrainer:
     def _ensure_fused(self, max_events: Optional[int] = None):
         if self._fused is None:
             from repro.core.fused import build_fused_pair_scan
-            self._log.log("compile", key="fused", telemetry=self.telemetry)
+            self._log.log("compile", key="fused", telemetry=self.telemetry,
+                          trace=self.trace)
+            # trace reuses telemetry's widened scan outputs — the block
+            # streams the identity tuple either way, so trace=True adds
+            # zero device work beyond what telemetry already pays
             self._fused = build_fused_pair_scan(
                 self.loss_fn, self.scheduler.fused_spec(),
-                use_kernel=self.use_kernel, telemetry=self.telemetry)
+                use_kernel=self.use_kernel,
+                telemetry=self.telemetry or self.trace)
             # Same aliasing hazard as _ensure_sparse: the fused block
             # donates both W and S.
             if any(w is s for w, s in zip(jax.tree.leaves(self.W),
@@ -1041,18 +1105,18 @@ class DecentralizedTrainer:
             xs = (jnp.asarray(factors, dtype=jnp.float32),
                   jnp.asarray(picks, dtype=jnp.float32),
                   jnp.asarray(etas, dtype=jnp.float32))
-            if self.telemetry:
-                self._log.log("block_dispatch", mode="fused", events=E,
-                              rounds=rounds)
+            self._log.log("block_dispatch", mode="fused", events=E,
+                          rounds=rounds)
             with jax.profiler.TraceAnnotation("dispatch:fused"):
                 (self.W, self.S, self.y, self._ptr, times, lock_free,
                  comm_dev), ys = self._fused(
                     self.W, self.S, self.y, self._ptr, self._pools,
                     times, lock_free, comm_dev, *xs)
-            if self.telemetry:
+            if self.telemetry or self.trace:
                 # buffer the block's (t_ev, i, p, t_raw) event stream on
-                # device — folded once at drain (fused_metrics_fold), so
-                # telemetry adds no in-loop work beyond the scan outputs
+                # device — consumed once at drain (fused_metrics_fold /
+                # drain_fused_payload), so telemetry and trace add no
+                # in-loop work beyond the scan outputs
                 self._fused_payload.append(ys)
                 t_seq = ys[0]
             else:
@@ -1085,6 +1149,7 @@ class DecentralizedTrainer:
                 n_active_mean=(E_i + min(pairs, E_i)) / max(E_i, 1)))
             prev_comm, prev_rounds = comm_i, mr
         t_end = history[-1].time
+        trc = self._trace_summary()   # before telemetry: it clears payload
         tel = self._telemetry_summary(t_end)
         self._log.log("run_end", rounds=rounds, t=t_end,
                       comm=history[-1].comm_param_copies)
@@ -1095,7 +1160,7 @@ class DecentralizedTrainer:
             total_comm_copies=history[-1].comm_param_copies,
             param_count=self.param_count,
             bytes_per_scalar=self.dtype.itemsize,
-            telemetry=tel,
+            telemetry=tel, trace=trc,
         )
 
     def _fused_record(self, eval_buf: jax.Array, i: int, t_last: jax.Array,
@@ -1144,6 +1209,7 @@ class DecentralizedTrainer:
                          metric=float(vals[i, 1]), comm_param_copies=mc,
                          n_active_mean=ma)
             for i, (mk, mt, mc, ma) in enumerate(meta)]
+        trc = self._trace_summary()
         tel = self._telemetry_summary(t)
         self._log.log("run_end", rounds=rounds, t=t, comm=comm)
         return RunResult(
@@ -1152,7 +1218,7 @@ class DecentralizedTrainer:
             total_events=rounds, total_time=t, total_comm_copies=comm,
             param_count=self.param_count,
             bytes_per_scalar=self.dtype.itemsize,
-            telemetry=tel,
+            telemetry=tel, trace=trc,
         )
 
     def _finish(self, history, k, t, comm, rounds, active_sizes) -> RunResult:
@@ -1160,6 +1226,7 @@ class DecentralizedTrainer:
         history.append(HistoryPoint(
             k=k, time=t, loss=loss, metric=metric, comm_param_copies=comm,
             n_active_mean=float(np.mean(active_sizes)) if active_sizes else 0.0))
+        trc = self._trace_summary()
         tel = self._telemetry_summary(t)
         self._log.log("run_end", rounds=rounds, t=t, comm=comm)
         return RunResult(
@@ -1168,7 +1235,7 @@ class DecentralizedTrainer:
             total_events=rounds, total_time=t, total_comm_copies=comm,
             param_count=self.param_count,
             bytes_per_scalar=self.dtype.itemsize,
-            telemetry=tel,
+            telemetry=tel, trace=trc,
         )
 
     def _eval_now(self):

@@ -1,4 +1,4 @@
-"""Observability: device-resident telemetry + structured run logging.
+"""Observability: device-resident telemetry, tracing + structured logging.
 
 ``repro.obs`` is the measurement layer the paper's argument needs at
 runtime — per-worker staleness (Pathsearch's B ≤ N−1 bound, Remark 4),
@@ -10,20 +10,35 @@ event: after PR 7 fused generation and consumption into one compiled
 scan, any per-event host sync would reintroduce the dispatch overhead
 PRs 3–7 removed).
 
+On top of the aggregate counters, the tracing layer
+(:mod:`repro.obs.trace` + :mod:`repro.obs.critical_path`) buffers the
+full event-identity stream under the same drain-once discipline and
+reconstructs per-worker virtual-time timelines (Chrome Trace Event
+Format, loadable in Perfetto), the event dependency DAG's critical path,
+and a per-worker wait-blame decomposition — the "straggler tax" table
+that quantifies what DSGD-AAU's adaptive neighbor count saves.
+
 Around the device core, :class:`RunLogger` writes structured JSONL run
 logs (block dispatches, bucket-rung choices, compile events, pool-wrap
-warnings) replacing bare ``warnings.warn``, and ``jax.named_scope``
-annotations on the kernels and update bodies make ``--profile`` traces
-legible.
+warnings — every record wall-clock timestamped) replacing bare
+``warnings.warn``, and ``jax.named_scope`` annotations on the kernels
+and update bodies make ``--profile`` traces legible.
 """
+from repro.obs.critical_path import (attribute_wait, critical_path,
+                                     straggler_tax)
 from repro.obs.metrics import (MetricsCarry, block_metrics_update,
                                dense_metrics_update, fused_metrics_fold,
                                init_metrics, metrics_summary,
                                sparse_metrics_update)
 from repro.obs.runlog import RunLogger
+from repro.obs.trace import (Trace, TraceRecorder, chrome_trace,
+                             drain_fused_payload, load_run_log, wall_track)
 
 __all__ = [
-    "MetricsCarry", "RunLogger", "block_metrics_update",
-    "dense_metrics_update", "fused_metrics_fold", "init_metrics",
-    "metrics_summary", "sparse_metrics_update",
+    "MetricsCarry", "RunLogger", "Trace", "TraceRecorder",
+    "attribute_wait", "block_metrics_update", "chrome_trace",
+    "critical_path", "dense_metrics_update", "drain_fused_payload",
+    "fused_metrics_fold", "init_metrics", "load_run_log",
+    "metrics_summary", "sparse_metrics_update", "straggler_tax",
+    "wall_track",
 ]

@@ -17,6 +17,12 @@ Events the trainer emits (the log schema, also documented in README):
 ``staleness_bound`` DSGD-AAU runtime monitor result (ok / exceeded)
 ``run_end``        rounds, t, comm — final totals
 
+Every record additionally carries ``ts`` — wall-clock seconds since the
+logger was constructed (monotonic clock) — which is what lets
+``python -m repro.obs.trace`` rebuild a wall-time Perfetto track
+(per-block dispatch spans, per-rung segment spans, compile instants)
+from the log alone.
+
 ``warn_once(key, message, warn=True)`` dedupes by key for the logger's
 lifetime and forwards to :func:`warnings.warn` (stacklevel raised so the
 caller's caller is blamed) — keeping the stderr contract tests rely on
@@ -25,6 +31,7 @@ while the JSONL file gets the structured copy.
 from __future__ import annotations
 
 import json
+import time
 import warnings
 from typing import IO, Optional, Set, Union
 
@@ -43,6 +50,7 @@ class RunLogger:
             self._fh = open(path, "a", encoding="utf-8")
             self._own = True
         self._seen: Set[str] = set()
+        self._t0 = time.monotonic()
 
     @property
     def enabled(self) -> bool:
@@ -51,7 +59,8 @@ class RunLogger:
     def log(self, event: str, **fields) -> None:
         if self._fh is None:
             return
-        rec = {"event": event}
+        rec = {"event": event,
+               "ts": round(time.monotonic() - self._t0, 6)}
         rec.update(fields)
         self._fh.write(json.dumps(rec) + "\n")
         self._fh.flush()

@@ -42,6 +42,10 @@ def main(argv=None) -> int:
     ap.add_argument("--telemetry", action="store_true",
                     help="record device-resident per-worker telemetry "
                          "(repro.obs) into the artifact's telemetry section")
+    ap.add_argument("--trace", action="store_true",
+                    help="record event-identity traces and the wait-blame / "
+                         "straggler-tax summary (repro.obs.trace) into the "
+                         "artifact's trace section")
     ap.add_argument("--run-log", default=None,
                     help="append structured JSONL run events here")
     args = ap.parse_args(argv)
@@ -63,6 +67,8 @@ def main(argv=None) -> int:
         over["max_events"] = None
     if args.telemetry:
         over["telemetry"] = True
+    if args.trace:
+        over["trace"] = True
     if args.run_log:
         over["run_log"] = args.run_log
     if over:

@@ -19,6 +19,11 @@ The JSON artifact schema (consumed by experiments/render_tables.py):
                       grad_steps_total,
                       staleness_bound?: {bound, observed_max, ok},
                       bucket_occupancy?: [{A, events, lane_fill}]} ],
+  "trace":         [ {scenario, n, algorithm, n_seeds, events,
+                      straggler_tax_mean, busy_t_mean, wait_t_mean,
+                      blame_total_mean, residual_wait_mean,
+                      blame_concentration, blame_top: [{worker, blame_t,
+                      share}], cp_wait_frac_mean} ],
 }
 ```
 
@@ -26,7 +31,10 @@ The ``telemetry`` section is present only when the spec ran with
 ``telemetry=True`` (device-resident counters drained once per run — see
 repro/obs); ``staleness_bound`` appears for DSGD-AAU rows (the 2N−4
 event-staleness monitor induced by the B ≤ N−1 per-epoch commit bound)
-and ``bucket_occupancy`` for bucketed sparse streams.
+and ``bucket_occupancy`` for bucketed sparse streams.  The ``trace``
+section likewise appears only for ``trace=True`` runs — the wait-blame /
+straggler-tax decomposition of repro/obs/critical_path (the numbers
+behind ``render_tables.straggler_tax_table``).
 
 ``speedup_mean`` is NaN (serialized as the JSON string "nan") whenever a
 run never reached the target loss inside its budget — the ``unreached``
@@ -43,7 +51,7 @@ from typing import Dict, List
 import jax
 
 from repro.xp.sweep import (SweepResult, convergence_rows, speedup_rows,
-                            telemetry_rows)
+                            telemetry_rows, trace_rows)
 
 
 def _json_safe(obj):
@@ -82,6 +90,9 @@ def artifact_payload(sweep: SweepResult) -> Dict[str, object]:
     rows = telemetry_rows(sweep)
     if rows:  # present only for telemetry=True runs (see module docstring)
         payload["telemetry"] = rows
+    t_rows = trace_rows(sweep)
+    if t_rows:  # present only for trace=True runs
+        payload["trace"] = t_rows
     return payload
 
 
@@ -133,5 +144,11 @@ def csv_rows(payload: Dict[str, object]) -> List[str]:
             derived += (f";bound={b['bound']};"
                         f"bound_ok={'yes' if b['ok'] else 'VIOLATED'}")
         out.append(f"paper_figures/telemetry/{r['scenario']}/N{r['n']}/"
+                   f"{r['algorithm']},0.0,{derived}")
+    for r in payload.get("trace", []):
+        derived = (f"tax={parse_float(r['straggler_tax_mean']):.3f};"
+                   f"blame_conc={parse_float(r['blame_concentration']):.3f};"
+                   f"cp_wait={parse_float(r['cp_wait_frac_mean']):.3f}")
+        out.append(f"paper_figures/trace/{r['scenario']}/N{r['n']}/"
                    f"{r['algorithm']},0.0,{derived}")
     return out

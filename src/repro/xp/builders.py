@@ -111,4 +111,4 @@ def build_trainer(spec: ExperimentSpec, alg: str, n: int, seed: int,
         mode=spec.mode, block_size=spec.block_size,
         batch_pool=batch_pool if batch_pool is not None else spec.batch_pool,
         dtype=dtype or spec.dtype,
-        telemetry=spec.telemetry, run_log=spec.run_log)
+        telemetry=spec.telemetry, trace=spec.trace, run_log=spec.run_log)

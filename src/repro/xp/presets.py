@@ -7,7 +7,9 @@ N ∈ {512, 1024} (bucketed sparse path, no synchronous reference).
 ``smoke`` is the CI dry-run tier: every registered scenario at N = 8 for a
 handful of events, proving the whole harness (spec → sweep → artifact)
 stays importable and runnable; ``smoke_xl`` is its N = 512 sibling that
-pins the multi-bucket dispatch path in CI.
+pins the multi-bucket dispatch path in CI.  ``trace_tables`` records the
+wait-blame / straggler-tax artifact (``BENCH_trace.json``) behind
+``render_tables.straggler_tax_table``.
 """
 from __future__ import annotations
 
@@ -135,12 +137,40 @@ def fused_smoke_spec() -> ExperimentSpec:
     )
 
 
+def trace_tables_spec() -> ExperimentSpec:
+    """Recorded configuration behind ``BENCH_trace.json``.
+
+    The wait-blame / straggler-tax comparison the paper's narrative makes
+    qualitatively: DSGD-AAU vs AD-PSGD against the synchronous reference,
+    under the default and heavy-tailed duration regimes.  Event-bounded so
+    the three algorithms attribute blame over the same number of events,
+    and small enough (N = 16) that the table regenerates in seconds.
+    """
+    return ExperimentSpec(
+        name="trace_tables",
+        algorithms=("dsgd_aau", "ad_psgd"),
+        reference="dsgd_sync",
+        scenarios=("paper_default", "heavy_tail"),
+        scales=(16,),
+        seeds=(0, 1),
+        mode="auto",
+        max_events=200,
+        max_time=None,
+        ref_max_events=200,
+        eval_every=100,
+        ref_eval_every=100,
+        target_loss=0.9,
+        trace=True,
+    )
+
+
 PRESETS = {
     "paper_figures": paper_figures_spec,
     "paper_figures_xl": paper_figures_xl_spec,
     "smoke": smoke_spec,
     "smoke_xl": smoke_xl_spec,
     "fused_smoke": fused_smoke_spec,
+    "trace_tables": trace_tables_spec,
 }
 
 

@@ -50,6 +50,9 @@ class ExperimentSpec:
     horizon: Optional[int] = None        # single-edge event-horizon batching
     telemetry: bool = False              # device-resident per-worker counters
                                          # (repro.obs) recorded per cell
+    trace: bool = False                  # event-identity tracing: wait-blame
+                                         # / critical-path summary
+                                         # (repro.obs.trace) per cell
     run_log: Optional[str] = None        # JSONL structured run-log path
 
     # budgets

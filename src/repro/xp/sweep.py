@@ -296,6 +296,51 @@ def telemetry_rows(sweep: SweepResult) -> List[Dict[str, object]]:
     return rows
 
 
+def trace_rows(sweep: SweepResult) -> List[Dict[str, object]]:
+    """Per (scenario, n, algorithm): wait-blame / straggler-tax summary.
+
+    Only populated when the spec ran with ``trace=True`` (each
+    ``RunResult.trace`` carries
+    ``repro.obs.critical_path.straggler_tax``).  Seed-aggregated: the tax,
+    critical-path wait fraction and blame concentration (largest single
+    worker's share of total blame) average across seeds; ``blame_top`` is
+    reported for the first seed, whose stream the recorded artifacts pin.
+    """
+    spec = sweep.spec
+    rows: List[Dict[str, object]] = []
+    algs = ((spec.reference,) if spec.reference else ()) + spec.algorithms
+    for scen, n in sweep.cells():
+        for alg in algs:
+            trcs = [r.result.trace for r in sweep.select(scen, alg, n)
+                    if r.result.trace is not None]
+            if not trcs:
+                continue
+            conc = [
+                (max(t["blame"]) / t["blame_total"])
+                if t["blame_total"] > 0 else 0.0
+                for t in trcs]
+            rows.append({
+                "scenario": scen, "n": n, "algorithm": alg,
+                "n_seeds": len(trcs),
+                "events": int(np.mean([t["events"] for t in trcs])),
+                "straggler_tax_mean": round(float(np.mean(
+                    [t["straggler_tax"] for t in trcs])), 6),
+                "busy_t_mean": round(float(np.mean(
+                    [t["busy_t"] for t in trcs])), 6),
+                "wait_t_mean": round(float(np.mean(
+                    [t["wait_t"] for t in trcs])), 6),
+                "blame_total_mean": round(float(np.mean(
+                    [t["blame_total"] for t in trcs])), 6),
+                "residual_wait_mean": round(float(np.mean(
+                    [t["residual_wait"] for t in trcs])), 6),
+                "blame_concentration": round(float(np.mean(conc)), 6),
+                "blame_top": trcs[0]["blame_top"],
+                "cp_wait_frac_mean": round(float(np.mean(
+                    [t["critical_path"]["wait_frac"] for t in trcs])), 6),
+            })
+    return rows
+
+
 def convergence_rows(sweep: SweepResult,
                      max_points: int = 80) -> List[Dict[str, object]]:
     """Per (scenario, n, algorithm): loss-vs-virtual-time curve, seed-averaged.
